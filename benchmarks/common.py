@@ -1,0 +1,46 @@
+"""Shared helpers for the paper-reproduction benchmarks.
+
+Every module prints ``name,us_per_call,derived`` CSV rows (benchmarks/run.py
+contract) and can emit richer tables with --full."""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core.noise import qcd
+from repro.core.strategies import RoutingMode
+from repro.dragonfly import (DragonflySimulator, DragonflyTopology,
+                             SimParams, TopologyParams)
+from repro.dragonfly.routing import RoutingPolicy
+from repro.dragonfly.topology import make_allocation
+from repro.dragonfly.traffic import PATTERNS, run_benchmark, run_iteration
+
+# "Piz-Daint-like" (large) and "Cori-like" (small) topologies for Fig 8/9
+DAINT = TopologyParams(n_groups=12)
+CORI = TopologyParams(n_groups=8)
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.3f},{derived}")
+
+
+def boxstats(xs) -> dict:
+    xs = np.asarray(xs, dtype=np.float64)
+    return {
+        "median": float(np.median(xs)),
+        "mean": float(xs.mean()),
+        "q1": float(np.percentile(xs, 25)),
+        "q3": float(np.percentile(xs, 75)),
+        "p99": float(np.percentile(xs, 99)),
+        "max": float(xs.max()),
+        "qcd": qcd(xs),
+    }
+
+
+MODES3 = (RoutingMode.ADAPTIVE_0, RoutingMode.ADAPTIVE_3, "app_aware")
+MODE_LABEL = {RoutingMode.ADAPTIVE_0: "default",
+              RoutingMode.ADAPTIVE_1: "incmin",
+              RoutingMode.ADAPTIVE_3: "highbias",
+              "app_aware": "appaware"}

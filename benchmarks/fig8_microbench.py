@@ -1,0 +1,96 @@
+"""Fig. 8/9 — microbenchmarks x input sizes x routing strategies.
+
+Piz-Daint-like: 1024 ranks over 6 of 12 groups (the paper: 1024 nodes, 257
+routers, 6 groups).  Cori-like: 64 ranks over 5 of 8 groups.  Times are
+normalized to the Default (ADAPTIVE/INCR-MINIMAL) median; the x-axis
+annotation carries the %-of-traffic Application-Aware sent via Default."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import CORI, DAINT, MODE_LABEL, boxstats, emit
+from repro.core.strategies import RoutingMode
+from repro.dragonfly import DragonflySimulator, DragonflyTopology, SimParams
+from repro.dragonfly.topology import make_allocation
+from repro.dragonfly.traffic import run_benchmark
+
+SWEEP = {
+    "pingpong": [dict(size=1024), dict(size=1 << 20)],
+    "allreduce": [dict(elements=1024), dict(elements=262144)],
+    "alltoall": [dict(size_per_pair=1024), dict(size_per_pair=65536)],
+    "barrier": [dict()],
+    "broadcast": [dict(size=4096), dict(size=4 << 20)],
+    "halo3d": [dict(nx=256), dict(nx=768)],
+    "sweep3d": [dict(nx=256), dict(nx=768)],
+}
+MODES = (RoutingMode.ADAPTIVE_0, RoutingMode.ADAPTIVE_3, "app_aware")
+
+
+def run(machine: str = "daint", iters: int = 8, seed: int = 0,
+        max_flows: int = 60_000, full_scale: bool = True):
+    if machine == "daint":
+        topo = DragonflyTopology(DAINT)
+        n_ranks, groups = (1024 if full_scale else 256), "groups:6"
+    else:
+        topo = DragonflyTopology(CORI)
+        n_ranks, groups = 64, "groups:5"
+    out = {}
+    for bench, sweeps in SWEEP.items():
+        for args in sweeps:
+            sim = DragonflySimulator(topo, SimParams(seed=seed,
+                                                     max_flows=max_flows))
+            al = make_allocation(topo, n_ranks, spread=groups, seed=seed)
+            res = run_benchmark(sim, al, bench, args, iters, modes=MODES)
+            key = f"{bench}." + (".".join(f"{v}" for v in args.values())
+                                 or "na")
+            med_def = np.median([r.time_us
+                                 for r in res[RoutingMode.ADAPTIVE_0]])
+            row = {"default_median_us": float(med_def)}
+            for m in MODES:
+                ts = np.array([r.time_us for r in res[m]])
+                row[MODE_LABEL[m]] = {
+                    "norm_median": float(np.median(ts) / med_def),
+                    "qcd": boxstats(ts)["qcd"],
+                }
+            aa = res["app_aware"]
+            frac = np.mean([
+                sum(v for k, v in r.mode_bytes.items()
+                    if k in (RoutingMode.ADAPTIVE_0, RoutingMode.ADAPTIVE_1))
+                / max(sum(r.mode_bytes.values()), 1e-9) for r in aa])
+            row["appaware_pct_default_traffic"] = float(frac * 100)
+            out[key] = row
+    return out
+
+
+def main(full: bool = False):
+    for machine, tag in (("daint", "fig8"), ("cori", "fig9")):
+        if not full and machine == "cori":
+            continue
+        res = run(machine, iters=10 if full else 4,
+                  max_flows=80_000 if full else 30_000,
+                  full_scale=full)
+        wins = 0
+        cells = 0
+        for key, row in res.items():
+            emit(f"{tag}.{key}.default", row["default_median_us"],
+                 f"norm=1.0;qcd={row['default']['qcd']:.3f}")
+            emit(f"{tag}.{key}.highbias",
+                 row["default_median_us"] * row["highbias"]["norm_median"],
+                 f"norm={row['highbias']['norm_median']:.3f}")
+            emit(f"{tag}.{key}.appaware",
+                 row["default_median_us"] * row["appaware"]["norm_median"],
+                 f"norm={row['appaware']['norm_median']:.3f};"
+                 f"pct_default={row['appaware_pct_default_traffic']:.0f}%")
+            best = min(row["default"]["norm_median"] if False else 1.0,
+                       row["highbias"]["norm_median"])
+            cells += 1
+            if row["appaware"]["norm_median"] <= best * 1.10:
+                wins += 1
+        emit(f"{tag}.check.appaware_within10pct_of_best",
+             wins / max(cells, 1) * 100, f"{wins}/{cells} cells")
+    return None
+
+
+if __name__ == "__main__":
+    main(full=True)

@@ -1,0 +1,43 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  --full runs paper-scale sweeps
+(minutes); the default is a reduced pass suitable for CI."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig3,fig7")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (fig3_allocation, fig4_fig5_hostnoise,
+                            fig7_routing_pingpong, fig8_microbench,
+                            fig10_applications, model_validation,
+                            table1_correlation, tpu_selector)
+    suites = {
+        "fig3": fig3_allocation.main,
+        "table1": table1_correlation.main,
+        "fig4fig5": fig4_fig5_hostnoise.main,
+        "fig7": fig7_routing_pingpong.main,
+        "fig8": fig8_microbench.main,
+        "fig10": fig10_applications.main,
+        "model": model_validation.main,
+        "tpu": tpu_selector.main,
+    }
+    chosen = (args.only.split(",") if args.only else list(suites))
+    print("name,us_per_call,derived")
+    for key in chosen:
+        t0 = time.time()
+        suites[key](full=args.full)
+        print(f"# {key} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

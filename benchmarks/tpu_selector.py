@@ -1,0 +1,70 @@
+"""Beyond-paper — Algorithm 1 arbitrating TPU collective schedules.
+
+Sweeps message sizes through the AppAwareSelector on the 2x16x16 mesh cost
+model and reports the crossover, plus the pod-boundary (DCN) bytes saved
+vs always-DIRECT for a llama3-8b-sized gradient reduction — the TPU
+analogue of Fig. 8's 'Application-Aware sends X% via Default'."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.analysis.roofline import param_counts_analytic
+from repro.collectives.modes import CollectiveMode
+from repro.collectives.selector import AppAwareSelector, ICICostModel, MeshSpec
+from repro.configs import get_config
+from repro.train.grad_comm import GradCommConfig, bucketize
+
+
+def crossover_sweep():
+    cm = ICICostModel(MeshSpec(n_pods=2, inner_chips=256))
+    sel = AppAwareSelector(cm)
+    flips = []
+    for size in [1 << k for k in range(10, 31)]:
+        m = sel.select(size)
+        sel.observe_predicted(size)
+        flips.append((size, m))
+        emit(f"tpu_selector.sweep.{size}B",
+             cm.predict(size, m).latency_cycles / 1e3,
+             m.value)
+    first_h = next((s for s, m in flips
+                    if m == CollectiveMode.HIERARCHICAL), None)
+    emit("tpu_selector.crossover_bytes", float(first_h or 0),
+         "first size routed hierarchically")
+    return flips
+
+
+def grad_reduce_savings():
+    """llama3-8b grad buckets: DCN wire bytes DIRECT vs app-aware."""
+    cfg = get_config("llama3-8b")
+    total, _ = param_counts_analytic(cfg)
+    grad_bytes = total * 2  # bf16 wire
+    mesh = MeshSpec(n_pods=2, inner_chips=256)
+    cm = ICICostModel(mesh)
+    sel = AppAwareSelector(cm)
+    bucket = 32 << 20
+    n_buckets = int(np.ceil(grad_bytes / bucket))
+    direct_dcn = hier_dcn = aware_dcn = 0.0
+    n, p, i = mesh.total, mesh.n_pods, mesh.inner_chips
+    for _ in range(n_buckets):
+        d = 2 * (n - 1) / n * bucket                    # full ring on DCN
+        h = 2 * (p - 1) / p * (bucket / i)              # shard on DCN
+        direct_dcn += d
+        hier_dcn += h
+        m = sel.select(bucket)
+        sel.observe_predicted(bucket)
+        aware_dcn += h if m == CollectiveMode.HIERARCHICAL else d
+    emit("tpu_selector.llama3_grad.direct_dcn_gb", direct_dcn / 2**30, "")
+    emit("tpu_selector.llama3_grad.hier_dcn_gb", hier_dcn / 2**30, "")
+    emit("tpu_selector.llama3_grad.appaware_dcn_gb", aware_dcn / 2**30,
+         f"saving={100 * (1 - aware_dcn / max(direct_dcn, 1e-9)):.1f}%")
+
+
+def main(full: bool = False):
+    crossover_sweep()
+    grad_reduce_savings()
+
+
+if __name__ == "__main__":
+    main(full=True)

@@ -1,0 +1,63 @@
+"""The paper's contribution end-to-end (deliverable b, scenario example).
+
+1. Dragonfly substrate: Algorithm 1 picks per-message routing modes on a
+   simulated Aries system, beating both static strategies across a
+   size sweep (the Fig. 8 protocol, reduced).
+2. TPU substrate: the SAME Algorithm 1 instance class arbitrates
+   DIRECT vs HIERARCHICAL collective schedules on a 2-pod mesh cost
+   model, and reports DCN bytes saved for a llama3-8b gradient reduce.
+
+    PYTHONPATH=src python examples/noise_aware_collectives.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.collectives.modes import CollectiveMode
+from repro.collectives.selector import AppAwareSelector, ICICostModel, MeshSpec
+from repro.core.strategies import RoutingMode
+from repro.dragonfly import DragonflySimulator, DragonflyTopology, SimParams, TopologyParams
+from repro.dragonfly.topology import make_allocation
+from repro.dragonfly.traffic import run_benchmark
+
+# ---- 1: Dragonfly (faithful reproduction substrate) ----------------------
+topo = DragonflyTopology(TopologyParams(n_groups=12))
+alloc = make_allocation(topo, 128, spread="groups:6", seed=0)
+print("== Dragonfly: alltoall sweep, 128 ranks over 6 groups ==")
+for size in (1024, 65536):
+    sim = DragonflySimulator(topo, SimParams(seed=0, max_flows=30000))
+    res = run_benchmark(sim, alloc, "alltoall", dict(size_per_pair=size),
+                        iterations=4)
+    meds = {}
+    for mode, rs in res.items():
+        label = mode.value if isinstance(mode, RoutingMode) else mode
+        meds[label] = np.median([r.time_us for r in rs])
+    base = meds["ADAPTIVE_0"]
+    row = "  ".join(f"{k}={v / base:5.2f}x" for k, v in meds.items())
+    print(f"  {size:>7}B/pair: {row}")
+
+# ---- 2: TPU pods (framework integration) ---------------------------------
+print("\n== TPU 2x16x16: Algorithm 1 over collective schedules ==")
+sel = AppAwareSelector(ICICostModel(MeshSpec(n_pods=2, inner_chips=256)))
+for size in (4 << 10, 1 << 20, 32 << 20, 512 << 20):
+    m = sel.select(size)
+    sel.observe_predicted(size)
+    print(f"  {size / 2**20:8.2f} MiB -> {m.value}")
+
+mesh = MeshSpec(n_pods=2, inner_chips=256)
+bucket, grads = 32 << 20, 16 << 30  # llama3-8b bf16 grads
+n, p, i = mesh.total, mesh.n_pods, mesh.inner_chips
+direct = 2 * (n - 1) / n * grads
+aware = 0.0
+for _ in range(grads // bucket):
+    m = sel.select(bucket)
+    sel.observe_predicted(bucket)
+    aware += (2 * (p - 1) / p * bucket / i
+              if m is CollectiveMode.HIERARCHICAL
+              else 2 * (n - 1) / n * bucket)
+print(f"\n  grad-reduce DCN bytes: direct={direct / 2**30:.1f} GiB, "
+      f"app-aware={aware / 2**30:.2f} GiB "
+      f"({100 * (1 - aware / direct):.1f}% saved)")

@@ -1,0 +1,20 @@
+"""Batched serving example (deliverable b): prefill + decode with the
+family-uniform engine; works for every --arch including enc-dec and VLM
+(stub frontends).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch zamba2-7b
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    a, _ = ap.parse_known_args()
+    serve_main(["--arch", a.arch, "--smoke", "--requests", "4",
+                "--prompt-len", "12", "--new-tokens", "12"])

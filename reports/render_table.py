@@ -1,0 +1,22 @@
+"""Render the EXPERIMENTS.md §Roofline table from dryrun_final.jsonl."""
+import json
+import sys
+
+rows = [json.loads(l) for l in open("reports/dryrun_final.jsonl")]
+mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+ok = [r for r in rows if r["status"] == "ok" and r["mesh"] == mesh]
+skip = [r for r in rows if r["status"] == "skipped" and r["mesh"] == mesh]
+hdr = ("| arch | shape | mem GB | compute ms | memory ms | coll ms | "
+       "dominant | useful | roofline frac |")
+sep = "|---|---|---|---|---|---|---|---|---|"
+print(hdr)
+print(sep)
+order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+for r in sorted(ok, key=lambda r: (order[r["shape"]], r["arch"])):
+    print(f"| {r['arch']} | {r['shape']} | {r['mem_total_gb']:.1f} | "
+          f"{r['compute_ms']:.1f} | {r['memory_ms']:.1f} | "
+          f"{r['collective_ms']:.1f} | {r['dominant']} | "
+          f"{r['useful_flops_ratio']:.3f} | {r['roofline_fraction']:.4f} |")
+for r in sorted(skip, key=lambda r: r["arch"]):
+    print(f"| {r['arch']} | {r['shape']} | — | — | — | — | documented skip "
+          f"(full attention) | — | — |")

@@ -1,0 +1,14 @@
+# repro.analysis — compiled-HLO introspection (the dry-run "profiler").
+#
+# hlo_parse walks the compiled module text, scales while-loop bodies by
+# their known_trip_count (XLA's cost_analysis() counts loop bodies ONCE —
+# probed and documented in DESIGN.md), and extracts per-collective bytes +
+# replica groups.  roofline turns that into the 3-term model.  These
+# collective byte counts are also the TPU backend for the paper's NIC
+# counters (collectives/hlo_counters.py).
+
+from repro.analysis.hlo_parse import parse_hlo, HloCosts, CollectiveOp
+from repro.analysis.roofline import roofline_terms, RooflineReport, V5E
+
+__all__ = ["parse_hlo", "HloCosts", "CollectiveOp", "roofline_terms",
+           "RooflineReport", "V5E"]

@@ -1,0 +1,354 @@
+"""Compiled-HLO text analysis with while-loop trip-count scaling.
+
+Why this exists (probed, see DESIGN.md §3): XLA:CPU's ``cost_analysis()``
+counts a ``while`` (lax.scan) body ONCE, so a 32-layer scanned transformer
+reports 1/32nd of its FLOPs.  The compiled text, however, carries
+``backend_config={"known_trip_count":{"n":"32"}}`` on the while op.  This
+module parses the module text, multiplies every computation's costs by the
+product of enclosing trip counts, and returns:
+
+  * flops         — dot/convolution FLOPs, trip-scaled
+  * bytes         — top-level operand+result bytes per computation
+                    (fusions count once; their bodies are on-chip traffic),
+                    trip-scaled — a consistent HBM-traffic model
+  * collectives   — every all-reduce / all-gather / reduce-scatter /
+                    all-to-all / collective-permute with operand bytes,
+                    replica groups, and trip multiplier
+
+Replica groups are resolved to device-id sets so the roofline layer can
+split collective bytes into intra-pod vs pod-boundary link classes.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0, "s4": 1, "u4": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?")
+# NB: tuple types with >5 elements carry /*index=N*/ comments (which
+# contain '='), so the tuple arm must be a lazy any-char match delimited by
+# the following " kind(" — probed on real compiled modules.
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_RG_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\]"
+                         r"(?:T\(([0-9,]+)\))?")
+_RG_EXPL_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# HBM-traffic model: ops that represent real memory round trips on TPU.
+# Bare elementwise ops / converts / copies / broadcasts are fused into
+# neighbors by the TPU backend (XLA:CPU leaves many unfused — counting them
+# would charge phantom traffic), so only these kinds accrue bytes:
+_BYTES_KINDS = frozenset({
+    "dot", "convolution", "fusion", "scatter", "gather", "dynamic-slice",
+    "dynamic-update-slice", "concatenate", "reduce", "reduce-window",
+    "sort", "rng", "cholesky", "triangular-solve", "pad", "select-and-scatter",
+}) | set(COLLECTIVE_KINDS)
+_CONVERT_FUSION_PREFIXES = ("wrapped_convert", "convert_", "copy_",
+                            "wrapped_copy", "wrapped_broadcast",
+                            "wrapped_transpose", "transpose_copy",
+                            "bitcast_")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _result_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    type_str: str
+    rest: str           # operands + attrs (raw tail of the line)
+    operands: list = field(default_factory=list)
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    operand_bytes: int          # per participating device
+    result_bytes: int
+    multiplier: int             # enclosing trip-count product
+    group_size: int
+    group0_devices: tuple       # device ids of the first replica group
+    computation: str
+    name: str
+
+    def wire_bytes(self) -> float:
+        """Bytes on the wire per device, ring-algorithm formulas."""
+        n = max(self.group_size, 1)
+        if n == 1:
+            return 0.0
+        if self.kind == "all-reduce":
+            return 2.0 * (n - 1) / n * self.operand_bytes
+        if self.kind == "collective-permute":
+            return float(self.operand_bytes)
+        if self.kind == "all-gather":
+            return (n - 1) / n * self.result_bytes      # result = full
+        # reduce-scatter / all-to-all: operand is the full local buffer
+        return (n - 1) / n * self.operand_bytes
+
+
+@dataclass
+class HloCosts:
+    flops: float                      # trip-scaled, per device
+    bytes_accessed: float             # trip-scaled HBM-traffic model
+    collectives: list                 # [CollectiveOp]
+    dot_flops_by_meta: dict           # op_name metadata -> flops
+    n_while: int
+    trip_counts: list
+    scope_bytes: dict = field(default_factory=dict)  # named_scope -> bytes
+    scope_flops: dict = field(default_factory=dict)
+
+    def collective_wire_bytes(self) -> float:
+        return sum(c.wire_bytes() * c.multiplier for c in self.collectives)
+
+
+#: named scopes tracked for §Perf adjustments (models/attention.py tags
+#: the flash-replaceable region)
+TRACKED_SCOPES = ("attn_core",)
+
+
+def _parse_operand_names(rest: str) -> list:
+    """Operand %names from the call tail (up to the closing paren depth)."""
+    out, depth = [], 1
+    token = ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        token += ch
+    for m in re.finditer(r"%([\w.\-]+)", token):
+        out.append(m.group(1))
+    return out
+
+
+def _iota_groups(g: int, s: int, dims, perm):
+    n = int(np.prod(dims))
+    arr = np.arange(n).reshape(dims)
+    if perm is not None:
+        arr = arr.transpose(perm)
+    return arr.reshape(g, s)
+
+
+def parse_replica_groups(rest: str):
+    """-> (group_size, group0_device_ids) or (0, ())."""
+    m = _RG_IOTA_RE.search(rest)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        perm = ([int(x) for x in m.group(4).split(",")]
+                if m.group(4) else None)
+        groups = _iota_groups(g, s, dims, perm)
+        return s, tuple(int(x) for x in groups[0])
+    m = _RG_EXPL_RE.search(rest)
+    if m:
+        first = m.group(1).split("},{")[0].strip("{}")
+        ids = tuple(int(x) for x in first.split(",") if x)
+        return len(ids), ids
+    return 0, ()
+
+
+def _dot_flops(op: Op, shapes: dict) -> float:
+    """2 * result_elems * contraction_size (batch dims cancel out)."""
+    result = _result_elems(op.type_str)
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    if not mc or not op.operands:
+        return 2.0 * result  # degenerate
+    lhs_shape = shapes.get(op.operands[0])
+    if lhs_shape is None:
+        return 2.0 * result
+    contract = 1
+    dims_str = mc.group(1)
+    if dims_str:
+        for d in dims_str.split(","):
+            di = int(d)
+            if di < len(lhs_shape):
+                contract *= lhs_shape[di]
+    return 2.0 * result * contract
+
+
+def _first_shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return ()
+    dims = m.group(2)
+    if not dims:
+        return ()
+    return tuple(int(d) for d in dims.split(","))
+
+
+def parse_hlo(text: str) -> HloCosts:
+    # --- split into computations ---------------------------------------
+    comps: dict = {}
+    cur = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc:
+            cur = mc.group(2)
+            comps[cur] = {"ops": [], "entry": bool(mc.group(1))}
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mo = _OP_RE.match(line)
+        if mo:
+            op = Op(name=mo.group(1), type_str=mo.group(2),
+                    kind=mo.group(3), rest=mo.group(4))
+            op.operands = _parse_operand_names(mo.group(4))
+            comps[cur]["ops"].append(op)
+
+    entry = next((n for n, c in comps.items() if c["entry"]), None)
+    if entry is None:  # fall back: biggest computation
+        entry = max(comps, key=lambda n: len(comps[n]["ops"]))
+
+    # --- compute multipliers (BFS from entry through while/call/fusion) --
+    mult: dict = {entry: 1}
+    trip_counts: list = []
+    n_while = 0
+    stack = [entry]
+    seen = set()
+    while stack:
+        cname = stack.pop()
+        if cname in seen:
+            continue
+        seen.add(cname)
+        m = mult.get(cname, 1)
+        for op in comps.get(cname, {"ops": []})["ops"]:
+            if op.kind == "while":
+                n_while += 1
+                tm = _TRIP_RE.search(op.rest)
+                trip = int(tm.group(1)) if tm else 1
+                trip_counts.append(trip)
+                for attr, extra in (("body", trip), ("condition", trip + 1)):
+                    ma = re.search(attr + r"=%?([\w.\-]+)", op.rest)
+                    if ma:
+                        sub = ma.group(1)
+                        mult[sub] = max(mult.get(sub, 0), m * extra)
+                        stack.append(sub)
+            else:
+                for ma in _CALLS_RE.finditer(op.rest):
+                    sub = ma.group(1)
+                    if sub in comps:
+                        mult[sub] = max(mult.get(sub, 0), m)
+                        stack.append(sub)
+
+    # --- accumulate costs -------------------------------------------------
+    flops = 0.0
+    bytes_accessed = 0.0
+    collectives: list = []
+    dot_by_meta: dict = {}
+    scope_bytes: dict = {s: 0.0 for s in TRACKED_SCOPES}
+    scope_flops: dict = {s: 0.0 for s in TRACKED_SCOPES}
+
+    def _scope_of(rest: str):
+        for s in TRACKED_SCOPES:
+            if s in rest:
+                return s
+        return None
+    for cname, comp in comps.items():
+        m = mult.get(cname)
+        if m is None:
+            continue  # unreachable (dead computation)
+        shapes = {op.name: _first_shape_dims(op.type_str)
+                  for op in comp["ops"]}
+        types = {op.name: op.type_str for op in comp["ops"]}
+        for op in comp["ops"]:
+            scope = _scope_of(op.rest)
+            if op.kind in ("dot", "convolution"):
+                fl = _dot_flops(op, shapes)
+                flops += m * fl
+                if scope:
+                    scope_flops[scope] += m * fl
+                meta = re.search(r'op_name="([^"]*)"', op.rest)
+                key = meta.group(1) if meta else op.name
+                dot_by_meta[key] = dot_by_meta.get(key, 0.0) + m * fl
+            opnd_bytes = sum(shape_bytes(types.get(o, ""))
+                             for o in op.operands)
+            if op.kind in COLLECTIVE_KINDS:
+                gs, g0 = parse_replica_groups(op.rest)
+                collectives.append(CollectiveOp(
+                    kind=op.kind,
+                    operand_bytes=opnd_bytes or shape_bytes(op.type_str),
+                    result_bytes=shape_bytes(op.type_str),
+                    multiplier=m, group_size=gs, group0_devices=g0,
+                    computation=cname, name=op.name))
+            # HBM-traffic model: only kinds that hit HBM on TPU (see
+            # _BYTES_KINDS); dtype-convert/copy fusions are CPU artifacts
+            if op.kind not in _BYTES_KINDS:
+                continue
+            if op.kind == "fusion" and op.name.startswith(
+                    _CONVERT_FUSION_PREFIXES):
+                continue
+            if op.kind == "dynamic-update-slice" or (
+                    op.kind == "fusion"
+                    and op.name.startswith("dynamic-update-slice")):
+                # in-place slice write: traffic = the update operand (the
+                # smallest operand for dus-rooted fusions), NOT the whole
+                # aliased buffer — critical for scan stashes and KV caches
+                cand = [shape_bytes(types.get(o, "")) for o in op.operands]
+                cand = [c for c in cand if c > 0]
+                nb = 2 * min(cand) if cand else 0
+            elif op.kind == "dynamic-slice":
+                nb = 2 * shape_bytes(op.type_str)
+            elif op.kind == "scatter" or (
+                    op.kind == "fusion" and op.name.startswith("scatter")):
+                # scatter-add RMW touches only the updated rows (operands:
+                # target, indices, updates) — not the whole target buffer
+                cand = sorted(shape_bytes(types.get(o, ""))
+                              for o in op.operands)
+                nb = 2 * (cand[-2] if len(cand) >= 2 else
+                          (cand[-1] if cand else 0))
+            else:
+                nb = shape_bytes(op.type_str) + opnd_bytes
+            bytes_accessed += m * nb
+            if scope:
+                scope_bytes[scope] += m * nb
+    return HloCosts(flops=flops, bytes_accessed=bytes_accessed,
+                    collectives=collectives, dot_flops_by_meta=dot_by_meta,
+                    n_while=n_while, trip_counts=trip_counts,
+                    scope_bytes=scope_bytes, scope_flops=scope_flops)

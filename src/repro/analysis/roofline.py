@@ -1,0 +1,213 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute    = HLO_FLOPs(trip-scaled)      / peak_FLOP/s    per chip
+    memory     = HLO_bytes(trip-scaled)      / HBM_bw         per chip
+    collective = wire_bytes per link class   / link_bw        per chip
+
+Hardware constants (assignment): TPU v5e — 197 TFLOP/s bf16/chip,
+819 GB/s HBM, ~50 GB/s/link ICI.  Cross-pod traffic rides DCN, charged at
+a conservative 12.5 GB/s/chip.
+
+The dominant term is the bottleneck the §Perf loop iterates on;
+MODEL_FLOPS / HLO_FLOPs is the useful-compute ratio (catches remat and
+dispatch-einsum waste).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.analysis.hlo_parse import HloCosts
+
+
+@dataclass(frozen=True)
+class HwSpec:
+    name: str
+    peak_flops: float          # per chip, bf16
+    hbm_bw: float              # bytes/s per chip
+    ici_bw: float              # bytes/s per chip per link class (intra-pod)
+    dcn_bw: float              # bytes/s per chip (pod boundary)
+
+
+V5E = HwSpec(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
+             ici_bw=50e9, dcn_bw=12.5e9)
+
+
+def classify_collective(group0_devices, mesh_shape) -> str:
+    """'cross_pod' if the replica group spans pod boundaries, else 'intra'.
+
+    Device ids are row-major over mesh_shape; for ("pod","data","model")
+    the pod coordinate is id // (data*model)."""
+    if len(mesh_shape) < 3 or not group0_devices:
+        return "intra"
+    per_pod = int(np.prod(mesh_shape[1:]))
+    pods = {d // per_pod for d in group0_devices}
+    return "cross_pod" if len(pods) > 1 else "intra"
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: tuple
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    collective_intra_bytes: float
+    collective_cross_bytes: float
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    model_flops_total: float
+    n_collectives: int
+    extras: dict = field(default_factory=dict)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Roofline step time = max of the three (perfectly overlapped)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total_hlo = self.hlo_flops_per_chip * self.chips
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the bound:
+        (useful FLOPs / chips / peak) / bound_s."""
+        if self.bound_s <= 0:
+            return 0.0
+        useful_s = self.model_flops_total / self.chips / V5E.peak_flops
+        return useful_s / self.bound_s
+
+    def row(self) -> str:
+        return (f"{self.arch:22s} {self.shape:12s} {'x'.join(map(str, self.mesh)):>9s} "
+                f"{self.compute_s*1e3:9.3f} {self.memory_s*1e3:9.3f} "
+                f"{self.collective_s*1e3:9.3f} {self.dominant:10s} "
+                f"{self.useful_flops_ratio:7.3f} {self.roofline_fraction:7.3f}")
+
+
+def roofline_terms(costs: HloCosts, *, arch: str, shape: str,
+                   mesh_shape: tuple, model_flops: float,
+                   hw: HwSpec = V5E) -> RooflineReport:
+    chips = int(np.prod(mesh_shape))
+    intra = 0.0
+    cross = 0.0
+    for c in costs.collectives:
+        wb = c.wire_bytes() * c.multiplier
+        if classify_collective(c.group0_devices, mesh_shape) == "cross_pod":
+            cross += wb
+        else:
+            intra += wb
+    collective_s = intra / hw.ici_bw + cross / hw.dcn_bw
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=tuple(mesh_shape), chips=chips,
+        compute_s=costs.flops / hw.peak_flops,
+        memory_s=costs.bytes_accessed / hw.hbm_bw,
+        collective_s=collective_s,
+        collective_intra_bytes=intra,
+        collective_cross_bytes=cross,
+        hlo_flops_per_chip=costs.flops,
+        hlo_bytes_per_chip=costs.bytes_accessed,
+        model_flops_total=model_flops,
+        n_collectives=len(costs.collectives),
+    )
+
+
+def flash_ideal_bytes_per_chip(cfg, shape, chips: int,
+                               passes: float = 4.0) -> float:
+    """HBM traffic of the Pallas flash kernel replacing the jnp attention:
+    q,k,v reads + o write per layer, ~4 passes total (fwd + recompute +
+    bwd dq/dkv), all intermediates staying in VMEM."""
+    from repro.models.common import Family
+
+    if cfg.family == Family.SSM or not cfg.n_heads:
+        return 0.0
+    tokens = shape.global_batch * shape.seq_len
+    L = cfg.n_layers + (cfg.n_encoder_layers or 0)
+    per_tok = (cfg.n_heads + 2 * cfg.n_kv_heads + cfg.n_heads) * cfg.hd * 2
+    return tokens * per_tok * L * passes / chips
+
+
+def flash_adjusted(rep: "RooflineReport", costs: HloCosts, cfg, shape,
+                   hw: HwSpec = V5E):
+    """(adjusted memory term, adjusted roofline fraction): subtract the
+    measured "attn_core" scope traffic, add the kernel's ideal traffic."""
+    removed = costs.scope_bytes.get("attn_core", 0.0)
+    ideal = flash_ideal_bytes_per_chip(cfg, shape, rep.chips)
+    adj_bytes = max(rep.hlo_bytes_per_chip - removed + ideal, 0.0)
+    adj_memory_s = adj_bytes / hw.hbm_bw
+    bound = max(rep.compute_s, adj_memory_s, rep.collective_s)
+    useful_s = rep.model_flops_total / rep.chips / hw.peak_flops
+    return adj_memory_s, (useful_s / bound if bound > 0 else 0.0)
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D for dense training (N = params, D = tokens);
+    6*N_active*D for MoE; 2*N_active per generated token for decode."""
+    from repro.models.common import Family
+
+    n_total, n_active = param_counts_analytic(cfg)
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token per seq
+
+
+def param_counts_analytic(cfg) -> tuple:
+    """(total, active) parameter counts from the config dims."""
+    from repro.models.common import Family
+
+    d, L = cfg.d_model, cfg.n_layers
+    hd = cfg.hd
+    emb = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+
+    def attn_params():
+        return d * (cfg.n_heads * hd) * 2 + d * (cfg.n_kv_heads * hd) * 2
+
+    def mlp_params(f):
+        return d * f * (3 if cfg.glu else 2)
+
+    if cfg.family == Family.SSM:
+        d_in = cfg.ssm_expand * d
+        H = d_in // cfg.ssm_head_dim
+        per = d * (2 * d_in + 2 * cfg.ssm_state + H) + d_in * d
+        total = emb + L * per
+        return total, total
+    if cfg.family == Family.HYBRID:
+        d_in = cfg.ssm_expand * d
+        H = d_in // cfg.ssm_head_dim
+        per = d * (2 * d_in + 2 * cfg.ssm_state + H) + d_in * d
+        shared = attn_params() + mlp_params(cfg.d_ff)
+        total = emb + L * per + shared
+        return total, total
+    if cfg.family == Family.MOE:
+        fe = cfg.d_ff_expert or cfg.d_ff
+        per_expert = d * fe * (3 if cfg.glu else 2)
+        shared = mlp_params(fe * cfg.n_shared_experts) \
+            if cfg.n_shared_experts else 0
+        per = attn_params() + cfg.n_experts * per_expert + shared \
+            + d * cfg.n_experts
+        per_active = attn_params() + cfg.top_k * per_expert + shared \
+            + d * cfg.n_experts
+        return emb + L * per, emb + L * per_active
+    if cfg.family == Family.ENCDEC:
+        enc = cfg.n_encoder_layers * (attn_params() + mlp_params(cfg.d_ff))
+        dec = L * (2 * attn_params() + mlp_params(cfg.d_ff))
+        total = emb + enc + dec
+        return total, total
+    # dense / vlm
+    per = attn_params() + mlp_params(cfg.d_ff)
+    total = emb + L * per
+    return total, total

@@ -1,0 +1,8 @@
+# repro.ckpt — checkpoint save/restore (npz + zstd, async writer) and
+# elastic resharding onto changed meshes.
+
+from repro.ckpt.checkpoint import CheckpointManager, save_checkpoint, load_checkpoint
+from repro.ckpt.elastic import reshard_checkpoint
+
+__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint",
+           "reshard_checkpoint"]

@@ -1,0 +1,134 @@
+"""Checkpointing: flattened-pytree npz with zstd, async writer thread,
+atomic rename, retention, and step-exact resume metadata.
+
+Layout: <dir>/step_<n>/ {arrays.npz.zst, meta.json}; `latest` symlink is
+only flipped after a fully-written checkpoint (crash-safe restore)."""
+
+from __future__ import annotations
+
+import io
+import json
+import os
+import threading
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+import zstandard as zstd
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, jax.tree_util.tree_structure(tree)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, *, meta: dict = None,
+                    keep: int = 3) -> str:
+    """Synchronous save.  Returns the checkpoint path."""
+    names, leaves, _ = _flatten_with_names(tree)
+    arrays = {f"a{i}": np.asarray(leaf) for i, leaf in enumerate(leaves)}
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    comp = zstd.ZstdCompressor(level=3).compress(buf.getvalue())
+    with open(os.path.join(tmp, "arrays.npz.zst"), "wb") as f:
+        f.write(comp)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, "names": names, "meta": meta or {}}, f)
+    if os.path.exists(final):
+        import shutil
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _update_latest(ckpt_dir, final)
+    _retain(ckpt_dir, keep)
+    return final
+
+
+def _update_latest(ckpt_dir: str, final: str):
+    latest = os.path.join(ckpt_dir, "latest")
+    tmp_link = latest + ".tmp"
+    if os.path.islink(tmp_link) or os.path.exists(tmp_link):
+        os.remove(tmp_link)
+    os.symlink(os.path.basename(final), tmp_link)
+    os.replace(tmp_link, latest)
+
+
+def _retain(ckpt_dir: str, keep: int):
+    steps = sorted(
+        (int(d.split("_")[1]), d) for d in os.listdir(ckpt_dir)
+        if d.startswith("step_"))
+    for _, d in steps[:-keep] if keep > 0 else []:
+        import shutil
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def load_checkpoint(ckpt_dir: str, tree_like, *, step: int | None = None):
+    """Restore into the structure of `tree_like` (shapes/dtypes preserved
+    from disk).  Returns (tree, step, meta)."""
+    if step is None:
+        latest = os.path.join(ckpt_dir, "latest")
+        path = os.path.join(ckpt_dir, os.readlink(latest)) \
+            if os.path.islink(latest) else latest
+    else:
+        path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    with open(os.path.join(path, "arrays.npz.zst"), "rb") as f:
+        raw = zstd.ZstdDecompressor().decompress(f.read())
+    arrays = np.load(io.BytesIO(raw))
+    leaves = [arrays[f"a{i}"] for i in range(len(arrays.files))]
+    treedef = jax.tree_util.tree_structure(tree_like)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, meta["step"], meta.get("meta", {})
+
+
+@dataclass
+class CheckpointManager:
+    """Async manager: save() snapshots to host memory synchronously (so
+    training can donate buffers) and writes to disk on a worker thread."""
+
+    ckpt_dir: str
+    keep: int = 3
+    _thread: threading.Thread = field(default=None, repr=False)
+    _error: list = field(default_factory=list)
+
+    def __post_init__(self):
+        os.makedirs(self.ckpt_dir, exist_ok=True)
+
+    def save_async(self, step: int, tree, *, meta: dict = None):
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)  # snapshot now
+        self.wait()
+
+        def _write():
+            try:
+                save_checkpoint(self.ckpt_dir, step, host_tree, meta=meta,
+                                keep=self.keep)
+            except Exception as e:  # surfaced on next wait()
+                self._error.append(e)
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error:
+            raise self._error.pop()
+
+    def restore(self, tree_like, *, step: int | None = None):
+        return load_checkpoint(self.ckpt_dir, tree_like, step=step)
+
+    def latest_step(self) -> int | None:
+        try:
+            latest = os.path.join(self.ckpt_dir, "latest")
+            target = os.readlink(latest)
+            return int(target.split("_")[1])
+        except OSError:
+            return None

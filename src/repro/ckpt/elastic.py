@@ -1,0 +1,22 @@
+"""Elastic resharding: restore a checkpoint onto a DIFFERENT mesh.
+
+Checkpoints store unsharded (host-gathered) arrays, so elasticity is a
+placement problem, not a data problem: `reshard_checkpoint` re-places every
+leaf with the sharding rules evaluated against the NEW mesh (divisibility
+fallbacks included), letting a job restart on a shrunken/grown pod set —
+e.g. 2x16x16 -> 16x16 after losing a pod, or onto a differently-shaped
+model axis after re-planning TP."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.sharding.partition import ShardingPolicy, param_specs
+
+
+def reshard_checkpoint(tree, cfg, new_mesh, *,
+                       policy: ShardingPolicy | None = None):
+    """Place restored host arrays onto `new_mesh` with fresh specs."""
+    specs = param_specs(tree, cfg, new_mesh, policy)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), tree, specs)

@@ -1,0 +1,27 @@
+# repro.collectives — the paper's technique, adapted to TPU pods.
+#
+# Aries routing modes map to collective *schedules* (DESIGN.md §2):
+#   minimal / high-bias  ->  DIRECT: one-phase flat collectives (fewest
+#                            phases; every byte crosses the slow pod links)
+#   adaptive / spread    ->  HIERARCHICAL: pod-local reduce-scatter, cross-
+#                            pod exchange on shards, pod-local all-gather
+#                            (more phases/hops; scarce links carry 1/N)
+#
+# selector.AppAwareSelector runs the paper's Algorithm 1 verbatim on these
+# two modes, with (L, s) synthesized from HLO-derived link-class byte
+# counters (hlo_counters.py) — the TPU analogue of the Aries NIC counters.
+
+from repro.collectives.modes import CollectiveMode, mode_for_routing
+from repro.collectives.allreduce import (
+    allreduce_direct, allreduce_hierarchical, grad_allreduce,
+)
+from repro.collectives.alltoall import alltoall_direct, alltoall_hierarchical
+from repro.collectives.selector import AppAwareSelector, ICICostModel
+from repro.collectives.hlo_counters import HloCounterBackend
+
+__all__ = [
+    "CollectiveMode", "mode_for_routing",
+    "allreduce_direct", "allreduce_hierarchical", "grad_allreduce",
+    "alltoall_direct", "alltoall_hierarchical",
+    "AppAwareSelector", "ICICostModel", "HloCounterBackend",
+]

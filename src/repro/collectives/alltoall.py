@@ -1,0 +1,37 @@
+"""All-to-all schedules (shard_map) — MoE expert-parallel token exchange.
+
+DIRECT:        one all_to_all over the full expert-parallel span.  With
+               experts sharded across pods, token payloads cross the slow
+               DCN links in many small per-peer messages.
+
+HIERARCHICAL:  the paper's INCREASINGLY-MINIMAL analogue for alltoall:
+               phase 1 exchanges within the pod (fast ICI) so that each
+               chip aggregates all pod-local tokens bound for its
+               cross-pod peer group; phase 2 crosses pods with fewer,
+               larger messages.  (2-phase/hierarchical A2A.)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def alltoall_direct(x, axis_name: str, *, split_axis: int = 0,
+                    concat_axis: int = 0):
+    """Inside shard_map. x: [n*k, ...] split over `axis_name` peers."""
+    return jax.lax.all_to_all(x, axis_name, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=True)
+
+
+def alltoall_hierarchical(x, pod_axis: str, inner_axis: str):
+    """Inside shard_map.  x: [P*I*k, ...] destined buckets laid out as
+    (pod-major, inner-minor).  Phase 1: a2a over inner axis; phase 2: a2a
+    over pod axis with aggregated payloads."""
+    # phase 1: exchange within the pod (fast links)
+    x = jax.lax.all_to_all(x, inner_axis, split_axis=0, concat_axis=0,
+                           tiled=True)
+    # phase 2: exchange across pods (aggregated messages on slow links)
+    x = jax.lax.all_to_all(x, pod_axis, split_axis=0, concat_axis=0,
+                           tiled=True)
+    return x

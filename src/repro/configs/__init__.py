@@ -1,0 +1,11 @@
+# repro.configs — one module per assigned architecture (exact published
+# dims) + the input-shape sets + the registry used by --arch <id> flags.
+
+from repro.configs.registry import ARCHS, get_config, get_smoke_config, list_archs
+from repro.configs.shapes import SHAPES, InputShape, ShapeNotSupported, input_specs, check_supported
+
+__all__ = [
+    "ARCHS", "get_config", "get_smoke_config", "list_archs",
+    "SHAPES", "InputShape", "ShapeNotSupported", "input_specs",
+    "check_supported",
+]

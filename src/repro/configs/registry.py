@@ -1,0 +1,38 @@
+"""--arch <id> registry over the 10 assigned architectures."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.common import ModelConfig
+
+_MODULES = {
+    "paligemma-3b": "repro.configs.paligemma_3b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "llama3-8b": "repro.configs.llama3_8b",
+    "codeqwen1.5-7b": "repro.configs.codeqwen15_7b",
+    "qwen2-1.5b": "repro.configs.qwen2_1_5b",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "mamba2-130m": "repro.configs.mamba2_130m",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(ARCHS)}")
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(ARCHS)}")
+    return importlib.import_module(_MODULES[arch]).SMOKE
+
+
+def list_archs() -> tuple:
+    return ARCHS

@@ -1,0 +1,72 @@
+"""The assigned input-shape sets (one set, shared by all LM archs).
+
+    train_4k      seq 4096,   global_batch 256   -> train_step
+    prefill_32k   seq 32768,  global_batch 32    -> serve prefill
+    decode_32k    seq 32768,  global_batch 128   -> serve decode (1 token
+                                                    against a 32k cache)
+    long_500k     seq 524288, global_batch 1     -> long-context decode;
+                  needs sub-quadratic attention: SSM/hybrid only (DESIGN.md)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Family, ModelConfig
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+class ShapeNotSupported(Exception):
+    """Raised for documented skips (long_500k on pure full-attention)."""
+
+
+def check_supported(cfg: ModelConfig, shape: InputShape) -> None:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        raise ShapeNotSupported(
+            f"{cfg.name}: long_500k requires sub-quadratic attention "
+            f"(documented skip for pure full-attention archs, DESIGN.md §4)")
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    train:   {tokens [B,S], labels [B,S]} (+ stub frontend inputs)
+    prefill: {tokens [B,S]} (+ stubs)
+    decode:  {token [B,1]}  (cache/state shapes come from make_decode_state)
+    """
+    check_supported(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f = jnp.bfloat16
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                 "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    else:
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    if cfg.family == Family.ENCDEC and shape.kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_frames, cfg.d_model), f)
+    if cfg.family == Family.VLM and shape.kind != "decode":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.img_tokens, cfg.d_model), f)
+    return specs

@@ -1,0 +1,38 @@
+# repro.core — the paper's primary contribution.
+#
+# "Mitigating Network Noise on Dragonfly Networks through Application-Aware
+# Routing" (De Sensi, Di Girolamo, Hoefler — SC'19) contributes:
+#   1. a NIC-counter methodology for isolating network noise (noise.py),
+#   2. a LogP-inspired counter-driven performance model, Eq.(1)/(2)
+#      (perf_model.py),
+#   3. evidence that adaptive non-minimal routing is itself a noise source,
+#   4. Algorithm 1 — per-message application-aware routing-mode selection
+#      (app_aware.py), with counter backends (counters.py) and scaling-factor
+#      calibration (calibration.py).
+#
+# Everything here is network-agnostic: the same Algorithm 1 instance drives
+# the Cray-Aries Dragonfly simulator (repro.dragonfly) for the faithful
+# reproduction AND the TPU collective-schedule selector (repro.collectives)
+# for the framework integration.
+
+from repro.core.strategies import RoutingMode, ARIES_MODES, ADAPTIVE_MODES
+from repro.core.perf_model import (
+    AriesNICModel,
+    MessageShape,
+    predict_transmission_cycles,
+    flits_and_packets,
+)
+from repro.core.counters import NICCounters, CounterWindow, CounterBackend
+from repro.core.noise import qcd, iqr, NoiseReport, estimate_noise
+from repro.core.app_aware import AppAwareRouter, RouterConfig
+from repro.core.calibration import ScalingFactors, calibrate_scaling_factors
+
+__all__ = [
+    "RoutingMode", "ARIES_MODES", "ADAPTIVE_MODES",
+    "AriesNICModel", "MessageShape", "predict_transmission_cycles",
+    "flits_and_packets",
+    "NICCounters", "CounterWindow", "CounterBackend",
+    "qcd", "iqr", "NoiseReport", "estimate_noise",
+    "AppAwareRouter", "RouterConfig",
+    "ScalingFactors", "calibrate_scaling_factors",
+]

@@ -1,0 +1,150 @@
+"""Algorithm 1 — application-aware routing selection (paper §4.2/§4.3).
+
+Before each message is sent, `AppAwareRouter.select(msg_size)` returns the
+routing mode to use.  After the message is sent, the caller feeds back the
+NIC counters observed for that send via `observe(L, s)`.
+
+Faithful details reproduced from the paper:
+  * the application starts in ADAPTIVE (the Aries default);
+  * for alltoall call sites, "default" means INCREASINGLY MINIMAL BIAS
+    (ADAPTIVE_1), matching MPICH_GNI_A2A_ROUTING_MODE;
+  * decision rule Eq. (4):  switch to HIGH BIAS iff
+        f < (L_ad - L_bs)/(s_bs - s_ad) * (p+512)/1024
+    and the dual inequality to switch back;
+  * (L, s) for the *other* mode are estimated by scaling factors λ, σ when
+    the stored sample is older than `max_sample_age` selector invocations;
+  * a cumulative-size gate: the decision logic runs only once at least
+    `cumulative_threshold_bytes` (4 KiB) of traffic has accumulated since
+    the last decision; below the gate, messages are sent with HIGH BIAS
+    (small messages are latency-bound and HIGH BIAS has lower latency);
+  * counters are read after the send so the decision never delays the
+    message (the router is strictly one message behind, as in the paper).
+
+The router is *network-agnostic*: modes are opaque labels `mode_a` (the
+spread/adaptive schedule) and `mode_b` (the minimal/low-latency schedule),
+so the same class arbitrates Aries routing modes in the Dragonfly simulator
+and DIRECT-vs-HIERARCHICAL collective schedules on the TPU mesh
+(repro/collectives/selector.py).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Hashable, Optional
+
+from repro.core.perf_model import (flit_threshold, flits_and_packets,
+                                   transmission_cycles_eq2)
+from repro.core.strategies import ModePerformance, RoutingMode
+
+
+@dataclass(frozen=True)
+class RouterConfig:
+    mode_a: Hashable = RoutingMode.ADAPTIVE_0      # "Default"/spread schedule
+    mode_b: Hashable = RoutingMode.ADAPTIVE_3      # high-bias/minimal schedule
+    #: default mode_a replacement for alltoall call sites (paper §4.2 end).
+    mode_a_alltoall: Hashable = RoutingMode.ADAPTIVE_1
+    cumulative_threshold_bytes: int = 4 * 1024      # experimentally 4 KiB
+    max_sample_age: int = 16                        # "too old" horizon
+    #: λ, σ — scaling factors mapping mode_a's (L, s) to a mode_b estimate;
+    #: medians over microbenchmark sweeps (core/calibration.py).
+    lambda_latency: float = 0.8
+    sigma_stalls: float = 1.6
+    is_put: bool = True
+
+
+@dataclass
+class AppAwareRouter:
+    config: RouterConfig = field(default_factory=RouterConfig)
+    current: Hashable = None
+    samples: dict = field(default_factory=dict)  # mode -> ModePerformance
+    cumulative_bytes: int = 0
+    sent_bytes_by_mode: dict = field(default_factory=dict)
+    decisions: int = 0
+    _pending_mode: Optional[Hashable] = None
+
+    def __post_init__(self) -> None:
+        if self.current is None:
+            self.current = self.config.mode_a  # start ADAPTIVE (paper §4.2)
+
+    # ----------------------------------------------------------------- select
+    def select(self, msg_size_bytes: int, *, alltoall: bool = False) -> Hashable:
+        """selectRouting(msgSize) — Algorithm 1."""
+        cfg = self.config
+        mode_a = cfg.mode_a_alltoall if alltoall else cfg.mode_a
+        self.cumulative_bytes += msg_size_bytes
+
+        if self.cumulative_bytes < cfg.cumulative_threshold_bytes:
+            # Below the gate: latency-bound regime, always minimal-biased.
+            chosen = cfg.mode_b
+        else:
+            self.cumulative_bytes = 0
+            self.decisions += 1
+            chosen = self._decide(msg_size_bytes, mode_a)
+            self.current = chosen
+
+        self._pending_mode = chosen
+        self.sent_bytes_by_mode[chosen] = (
+            self.sent_bytes_by_mode.get(chosen, 0) + msg_size_bytes)
+        return chosen
+
+    def _decide(self, msg_size_bytes: int, mode_a: Hashable) -> Hashable:
+        cfg = self.config
+        f, p = flits_and_packets(msg_size_bytes, cfg.is_put)
+
+        if self.current == cfg.mode_b:
+            # Dual branch: currently HIGH BIAS, maybe switch back to mode_a.
+            perf_b = self.samples.get(cfg.mode_b)
+            if perf_b is None:
+                return cfg.mode_b  # nothing observed yet, keep going
+            perf_a = self._estimate_other(
+                perf_b, 1.0 / max(cfg.lambda_latency, 1e-9),
+                1.0 / max(cfg.sigma_stalls, 1e-9), mode_a)
+        else:
+            # Currently mode_a (ADAPTIVE / INCR-MINIMAL for alltoall).
+            perf_a = self.samples.get(self.current) \
+                or self.samples.get(mode_a)
+            if perf_a is None:
+                return mode_a
+            perf_b = self._estimate_other(
+                perf_a, cfg.lambda_latency, cfg.sigma_stalls, cfg.mode_b)
+        # Eq.(3): compare the Eq.(2) predictions directly (Eq.(4)'s flit
+        # threshold is the rearrangement, valid only for s_b > s_a — the
+        # direct form is equivalent there and correct in the corners).
+        t_a = transmission_cycles_eq2(
+            perf_a.latency_cycles, perf_a.stall_cycles_per_flit, f, p)
+        t_b = transmission_cycles_eq2(
+            perf_b.latency_cycles, perf_b.stall_cycles_per_flit, f, p)
+        return cfg.mode_b if t_b < t_a else mode_a
+
+    def _estimate_other(self, known: ModePerformance, lam: float, sig: float,
+                        other_mode: Hashable) -> ModePerformance:
+        """Return the stored sample for `other_mode` unless it is too old,
+        in which case scale the known mode's sample by (λ, σ) — paper §4.2."""
+        stored = self.samples.get(other_mode)
+        if stored is not None and stored.age <= self.config.max_sample_age:
+            return stored
+        return ModePerformance(
+            latency_cycles=known.latency_cycles * lam,
+            stall_cycles_per_flit=known.stall_cycles_per_flit * sig,
+        )
+
+    # ---------------------------------------------------------------- observe
+    def observe(self, latency_cycles: float, stalls_per_flit: float) -> None:
+        """Feed back the NIC counters measured for the last-sent message.
+        Called *after* the send (paper: 'Counters are read after sending the
+        message to not introduce delays in the transmission')."""
+        if self._pending_mode is None:
+            return
+        # Age every stored sample, then refresh the used mode's slot.
+        self.samples = {m: perf.aged() for m, perf in self.samples.items()}
+        self.samples[self._pending_mode] = ModePerformance(
+            latency_cycles, stalls_per_flit, age=0)
+        self._pending_mode = None
+
+    # ------------------------------------------------------------------ stats
+    def traffic_fraction(self, mode: Hashable) -> float:
+        """Fraction of bytes sent with `mode` (the x-axis % in Fig. 8/9)."""
+        total = sum(self.sent_bytes_by_mode.values())
+        if total == 0:
+            return 0.0
+        return self.sent_bytes_by_mode.get(mode, 0) / total

@@ -1,0 +1,6 @@
+# repro.data — deterministic synthetic LM data + host-sharded pipeline.
+
+from repro.data.synthetic import SyntheticLM, make_batch
+from repro.data.pipeline import DataPipeline, PipelineConfig
+
+__all__ = ["SyntheticLM", "make_batch", "DataPipeline", "PipelineConfig"]

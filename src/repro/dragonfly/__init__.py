@@ -1,0 +1,26 @@
+# repro.dragonfly — Cray-Aries-like Dragonfly network substrate.
+#
+# This package is the experimental platform of the faithful reproduction:
+# the paper measures on Piz Daint / Cori (Cray Aries); this container has no
+# network, so we reproduce the paper's experiments against a flow-level
+# ("fluid") congestion model of the Aries Dragonfly with UGAL-style adaptive
+# routing, credit-stall accounting, and phantom congestion.  The paper's §6
+# discusses simulation fidelity limits; ours is calibrated to reproduce the
+# qualitative phenomena (allocation-tier latency ladder, adaptive-vs-bias
+# crossover, alltoall spreading preference, heavy outlier tails), not
+# cycle-accuracy.
+
+from repro.dragonfly.topology import DragonflyTopology, TopologyParams, Allocation
+from repro.dragonfly.routing import RoutingPolicy
+from repro.dragonfly.simulator import DragonflySimulator, SimParams, FlowResult
+from repro.dragonfly.traffic import (
+    pingpong, allreduce, alltoall, barrier, broadcast, halo3d, sweep3d,
+    PATTERNS,
+)
+
+__all__ = [
+    "DragonflyTopology", "TopologyParams", "Allocation", "RoutingPolicy",
+    "DragonflySimulator", "SimParams", "FlowResult",
+    "pingpong", "allreduce", "alltoall", "barrier", "broadcast", "halo3d",
+    "sweep3d", "PATTERNS",
+]

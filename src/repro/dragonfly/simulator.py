@@ -1,0 +1,354 @@
+"""Flow-level ("fluid") congestion simulator for the Aries Dragonfly.
+
+Design (DESIGN.md §8): a per-phase fixed-point congestion model rather than
+a cycle-accurate flit simulator (which the paper itself avoids, §7: "
+simulating the exact tiled structure of Dragonfly would be too costly").
+
+One *phase* = a set of concurrent flows (e.g. one alltoall round, one
+ping-pong direction).  For each phase the simulator:
+  1. draws 2 minimal + 2 non-minimal candidate paths per flow (§2.2),
+  2. scores candidates with *stale, noisy* queue estimates (phantom
+     congestion, Won et al. [46]) plus the routing mode's minimal bias,
+  3. spreads each flow's bytes over candidates via softmin (fluid packet
+     spraying),
+  4. solves a small fixed point: byte loads -> link utilization -> phase
+     duration -> utilization,
+  5. derives per-flow NIC observables — latency L (hop + queuing delays)
+     and stall ratio s (bottleneck-utilization excess) — and plugs them
+     into the paper's Eq. (2) for the message time,
+  6. updates persistent link queues and the allocation's NIC counters.
+
+Background ("other job") traffic with Pareto-sized flows shares the links,
+producing the heavy outlier tails of Fig. 3.  All randomness is seeded.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.counters import NICCounters
+from repro.core.perf_model import MAX_OUTSTANDING_PACKETS
+from repro.core.strategies import RoutingMode
+from repro.dragonfly.routing import RoutingPolicy, score_candidates, spray_weights
+from repro.dragonfly.topology import PAD, Allocation, DragonflyTopology
+
+
+@dataclass(frozen=True)
+class SimParams:
+    seed: int = 0
+    #: minimal candidates = 4 (fluid union of Aries' per-packet 2-min draws
+    #: over the K global links); non-minimal = 2 as per §2.2
+    n_min_candidates: int = 4
+    n_nonmin_candidates: int = 2
+    #: statistical cap: phases with more flows are subsampled (bytes scaled)
+    max_flows: int = 120_000
+    #: fraction of a round's residual queue that persists to the next phase
+    queue_carryover: float = 0.35
+    #: phantom congestion (Won et al. [46]): credit-based estimates are
+    #: STALE — the router sees a mix of the current queue and an EMA memory
+    #: of past queues (drained hotspots look congested, fresh ones are
+    #: missed), times a lognormal factor, plus exponential "ghosts".
+    phantom_sigma: float = 0.45
+    phantom_ghost_s: float = 25e-6
+    est_staleness: float = 0.6         # weight of the stale memory
+    est_memory_decay: float = 0.5       # EMA decay of the stale memory
+    #: a packet waits behind only part of a queue (spraying interleaves it):
+    qwait_fraction: float = 0.6
+    #: stalls: a flow whose bottleneck link is offered `o` times its capacity
+    #: during the serialization window stalls s = stall_gain*max(0, o - thr)
+    #: cycles per flit (o>1 == credit backpressure; thr<1 == near-saturation
+    #: queueing effects).
+    stall_gain: float = 1.2
+    rho_threshold: float = 0.85
+    #: queuing delay added per hop per unit utilization excess (ns)
+    queue_delay_ns: float = 900.0
+    #: utilization is measured over at least this window: short messages do
+    #: not self-congest (credit buffers absorb them), sustained flows do.
+    min_phase_window_s: float = 50e-6
+    #: NIC flit serialization: one 64B-packet = 5 flits = 5 cycles @1GHz
+    flit_ns_per_byte: float = 5.0 / 64.0
+    #: within-phase adaptive feedback: packets later in the message react to
+    #: queues built by earlier packets (real-time local queue sensing on
+    #: Aries).  Scores get + max(0, rho - feedback_rho0)*window per link and
+    #: spray weights re-equilibrate this many times.
+    route_feedback_iters: int = 4
+    feedback_rho0: float = 0.9
+    #: background traffic (other jobs): Pareto-sized flows concentrated on
+    #: a slowly-rotating set of "hot" groups -> heavy outlier tails (Fig. 3)
+    bg_flows_per_phase: int = 16
+    bg_pareto_alpha: float = 1.1
+    bg_bytes_scale: float = 2.5e6
+    bg_hot_groups: int = 3
+    bg_hot_prob: float = 0.65
+    bg_rotate_phases: int = 50
+    bg_enable: bool = True
+    #: host-side constant per phase (not network noise! §3.3) — us
+    host_overhead_us: float = 1.5
+    host_noise_sigma: float = 0.25     # lognormal sigma of host-side jitter
+    nic_clock_ghz: float = 1.0
+
+
+@dataclass
+class FlowResult:
+    """Per-flow observables for one phase."""
+
+    t_us: np.ndarray            # Eq.(2) message time
+    latency_us: np.ndarray      # L
+    stalls_per_flit: np.ndarray  # s
+    flits: np.ndarray
+    packets: np.ndarray
+    nonmin_fraction: float      # byte fraction routed non-minimally
+
+    @property
+    def phase_time_us(self) -> float:
+        return float(self.t_us.max()) if self.t_us.size else 0.0
+
+
+class DragonflySimulator:
+    def __init__(self, topo: DragonflyTopology,
+                 params: SimParams = SimParams()):
+        self.topo = topo
+        self.params = params
+        self.rng = np.random.default_rng(params.seed)
+        self.link_queue_s = np.zeros(topo.n_links)  # seconds-to-drain units
+        self.est_memory_s = np.zeros(topo.n_links)  # stale estimate memory
+        self.counters: dict[str, NICCounters] = {}
+        self.clock_s: float = 0.0
+        self.total_flits_all_jobs: float = 0.0
+        self._phase_count = 0
+        self._hot_groups = self.rng.choice(
+            topo.params.n_groups,
+            size=min(params.bg_hot_groups, topo.params.n_groups),
+            replace=False)
+
+    # --------------------------------------------------------- counter API
+    def backend_for(self, allocation_id: str):
+        """CounterBackend view for one allocation's NICs."""
+        sim = self
+
+        class _Backend:
+            def read_counters(_s) -> NICCounters:
+                return sim.counters.setdefault(allocation_id, NICCounters())
+
+            def now_s(_s) -> float:
+                return sim.clock_s
+
+        return _Backend()
+
+    # ------------------------------------------------------------- internals
+    def _bg_flows(self, allocation: Allocation | None = None):
+        p = self.params
+        n = p.bg_flows_per_phase
+        if not p.bg_enable or n == 0:
+            return None
+        tp = self.topo.params
+        self._phase_count += 1
+        if self._phase_count % max(1, p.bg_rotate_phases) == 0:
+            self._hot_groups = self.rng.choice(
+                tp.n_groups, size=min(p.bg_hot_groups, tp.n_groups),
+                replace=False)
+        nodes_per_group = tp.routers_per_group * tp.nodes_per_blade
+        ours = np.asarray(allocation.nodes) if allocation is not None \
+            else np.empty(0, dtype=np.int64)
+
+        def draw(size):
+            hot = self.rng.random(size) < p.bg_hot_prob
+            grp = np.where(
+                hot,
+                self.rng.choice(self._hot_groups, size=size),
+                self.rng.integers(0, tp.n_groups, size=size))
+            off = self.rng.integers(0, nodes_per_group, size=size)
+            out = grp * nodes_per_group + off
+            # batch systems do not share nodes between jobs: other-job flows
+            # never originate/terminate on the allocation's nodes
+            for _ in range(3):
+                bad = np.isin(out, ours)
+                if not bad.any():
+                    break
+                out[bad] = self.rng.integers(0, tp.n_nodes, size=bad.sum())
+            return out
+
+        src = draw(n)
+        dst = draw(n)
+        dst = np.where(dst == src, (dst + 1) % tp.n_nodes, dst)
+        size = (self.rng.pareto(p.bg_pareto_alpha, size=n) + 1.0) \
+            * p.bg_bytes_scale
+        return src, dst, size
+
+    @staticmethod
+    def _flits_packets(bytes_: np.ndarray):
+        packets = np.maximum(1, np.ceil(bytes_ / 64.0))
+        flits = packets * 5.0  # PUT: 1 header + 4 payload flits
+        return flits, packets
+
+    # ------------------------------------------------------------- run_phase
+    def run_phase(self, src_nodes, dst_nodes, bytes_, policy: RoutingPolicy,
+                  allocation: Allocation | None = None) -> FlowResult:
+        """Simulate one phase of concurrent flows routed with `policy`."""
+        p = self.params
+        topo = self.topo
+        src = np.asarray(src_nodes, dtype=np.int64)
+        dst = np.asarray(dst_nodes, dtype=np.int64)
+        size = np.asarray(bytes_, dtype=np.float64)
+        n_app = src.shape[0]
+        if n_app == 0 and not (p.bg_enable and p.bg_flows_per_phase):
+            return FlowResult(*(np.zeros(0),) * 5, 0.0)
+
+        # statistical subsample of very large phases (load-preserving)
+        if n_app > p.max_flows:
+            idx = self.rng.choice(n_app, size=p.max_flows, replace=False)
+            scale = n_app / p.max_flows
+            src, dst, size = src[idx], dst[idx], size[idx] * scale
+            n_app = p.max_flows
+
+        bg = self._bg_flows(allocation)
+        if bg is not None:
+            src_all = np.concatenate([src, bg[0]])
+            dst_all = np.concatenate([dst, bg[1]])
+            size_all = np.concatenate([size, bg[2]])
+        else:
+            src_all, dst_all, size_all = src, dst, size
+        n_all = src_all.shape[0]
+
+        links, is_nonmin = topo.candidate_paths(
+            src_all, dst_all, self.rng,
+            n_min=p.n_min_candidates, n_nonmin=p.n_nonmin_candidates)
+        valid = links != PAD
+        safe = np.where(valid, links, 0)
+
+        # --- stale & noisy congestion estimate (phantom congestion) --------
+        noise = self.rng.lognormal(0.0, p.phantom_sigma, size=topo.n_links)
+        ghosts = self.rng.exponential(p.phantom_ghost_s, size=topo.n_links)
+        a = p.est_staleness
+        est_queue_s = ((1.0 - a) * self.link_queue_s
+                       + a * self.est_memory_s) * noise + ghosts
+
+        # --- contention window: the APP phase's clean serialization time ---
+        # (stall-free flit serialization of the largest app message; floored
+        # so transient small messages do not self-congest)
+        ser_s_app = float(size[:n_app].max() * p.flit_ns_per_byte) * 1e-9 \
+            if n_app else 0.0
+        window_s = max(ser_s_app, p.min_phase_window_s)
+        cap_bps = topo.capacity_gbs * 1e9
+        nic_ids = topo.nic_link(src_all)
+        inj_cap = topo.capacity_gbs[nic_ids] * 1e9 * window_s
+        size_inst = np.minimum(size_all, inj_cap)
+        packets_all = np.maximum(1, np.ceil(size_all / 64.0))
+        bg_policy = RoutingPolicy(RoutingMode.ADAPTIVE_0)
+
+        def weights_for(extra_queue_s):
+            est = est_queue_s + extra_queue_s
+            sc_app = score_candidates(links[:n_app], est, is_nonmin, policy)
+            wa = spray_weights(sc_app, policy, self.rng,
+                               packets=packets_all[:n_app])
+            if n_all > n_app:
+                sc_bg = score_candidates(links[n_app:], est, is_nonmin,
+                                         bg_policy)
+                wb = spray_weights(sc_bg, bg_policy, self.rng,
+                                   packets=packets_all[n_app:])
+                return np.concatenate([wa, wb], axis=0)
+            return wa
+
+        def loads_for(w):
+            # load_i: bytes offered DURING the window (a flow cannot inject
+            # more than its NIC moves in the window) -> instant contention
+            fb = size_inst[:, None, None] * w[:, :, None] * valid
+            li = np.zeros(topo.n_links)
+            np.add.at(li, safe.ravel(), fb.ravel())
+            np.add.at(li, nic_ids, size_inst)
+            return li
+
+        # within-phase adaptive feedback: later packets see queues built by
+        # earlier ones and re-equilibrate (per-packet real-time sensing).
+        # Damped (w <- (w + w_target)/2) to avoid synchronous flip-flopping.
+        w = weights_for(np.zeros(topo.n_links))
+        load_i = loads_for(w)
+        for _ in range(max(0, p.route_feedback_iters - 1)):
+            rho_fb = load_i / (cap_bps * window_s)
+            extra = np.maximum(0.0, rho_fb - p.feedback_rho0) * window_s
+            w = 0.5 * (w + weights_for(extra))
+            load_i = loads_for(w)
+        w_app = w[:n_app]
+
+        # load_q: full backlog bytes (feeds persistent queues / Fig.3 tails)
+        flow_bytes_q = size_all[:, None, None] * w[:, :, None] * valid
+        load_q = np.zeros(topo.n_links)
+        np.add.at(load_q, safe.ravel(), flow_bytes_q.ravel())
+
+        rho = load_i / (cap_bps * window_s)
+        lat_us, s_flit = self._observables(valid, safe, rho, w, nic_ids)
+        flits, packets = self._flits_packets(size_all)
+        win = (packets + MAX_OUTSTANDING_PACKETS // 2) / MAX_OUTSTANDING_PACKETS
+        lat_cycles = lat_us * 1e3 * p.nic_clock_ghz
+        t_cycles = win * lat_cycles + flits * (s_flit + 1.0)
+        t_us = t_cycles / (1e3 * p.nic_clock_ghz)
+        duration_s = max(float(t_us[:n_app].max()) * 1e-6, 1e-7) \
+            if n_app else window_s
+        # "network tile" aggregate: every job's flits on the wire (what a
+        # tile counter would see; §3.2's correlation trap)
+        self.total_flits_all_jobs += float(flits.sum())
+
+        # --- persistent queues (seconds-to-drain beyond this phase) --------
+        excess_s = np.maximum(0.0, load_q / cap_bps
+                              - max(duration_s, window_s))
+        self.est_memory_s = (self.est_memory_s * p.est_memory_decay
+                             + self.link_queue_s * (1 - p.est_memory_decay))
+        self.link_queue_s = self.link_queue_s * p.queue_carryover + excess_s
+        self.clock_s += duration_s
+
+        # --- NIC counters for the allocation (§2.3) ------------------------
+        app_flits, app_packets = flits[:n_app], packets[:n_app]
+        app_lat, app_stalls = lat_us[:n_app], s_flit[:n_app]
+        if allocation is not None:
+            c = self.counters.setdefault(allocation.allocation_id,
+                                         NICCounters())
+            c.observe(
+                flits=int(app_flits.sum()),
+                stalled_cycles=int((app_flits * app_stalls).sum()),
+                packets=int(app_packets.sum()),
+                latency_us_total=float((app_lat * app_packets).sum()),
+            )
+
+        nonmin_bytes = float(
+            (size_all[:n_app, None] * w_app * is_nonmin[None, :]).sum())
+        return FlowResult(
+            t_us=t_us[:n_app],
+            latency_us=app_lat,
+            stalls_per_flit=app_stalls,
+            flits=app_flits,
+            packets=app_packets,
+            nonmin_fraction=nonmin_bytes / max(float(size[:n_app].sum()), 1e-9),
+        )
+
+    def _observables(self, valid, safe, rho, w, nic_ids):
+        """Per-flow (L_us, s) from per-link utilization."""
+        p = self.params
+        tp = self.topo.params
+        rho_path = rho[safe] * valid                    # [n, ncand, hops]
+        hops = valid.sum(axis=-1)                       # [n, ncand]
+        excess = np.maximum(0.0, rho_path - p.rho_threshold)
+        qdelay_ns = p.queue_delay_ns * excess.sum(axis=-1)   # [n, ncand]
+        # waiting behind queues persisting from earlier traffic: a packet
+        # entering a link with q seconds-to-drain of backlog waits ~q
+        # (discounted: spraying interleaves it into the backlog).  This is
+        # THE outlier mechanism of Fig. 3 — and what adaptive routing dodges
+        # when its congestion estimate is fresh.
+        qwait_ns = (self.link_queue_s[safe] * valid).sum(axis=-1) \
+            * p.qwait_fraction * 1e9
+        lat_ns_cand = 2.0 * tp.nic_latency_ns + hops * tp.hop_latency_ns \
+            + qdelay_ns + qwait_ns
+        lat_us = (lat_ns_cand * w).sum(axis=-1) / 1e3   # weighted over cands
+        # stall ratio from the bottleneck link of each candidate path,
+        # including the NIC injection link
+        rho_nic = rho[nic_ids]                          # [n]
+        rho_bneck = np.maximum(rho_path.max(axis=-1),
+                               rho_nic[:, None])        # [n, ncand]
+        s_cand = p.stall_gain * np.maximum(0.0, rho_bneck - p.rho_threshold)
+        s_flit = (s_cand * w).sum(axis=-1)
+        return lat_us, s_flit
+
+    # ----------------------------------------------------------------- misc
+    def reset_queues(self) -> None:
+        self.link_queue_s[:] = 0.0

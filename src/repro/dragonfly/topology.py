@@ -1,0 +1,421 @@
+"""Cray Aries Dragonfly topology — paper §2.1.
+
+Connectivity tiers (Aries/Cascade):
+  * group: 6 chassis x 16 blades; each blade has one Aries router + 4 nodes;
+  * intra-chassis: every router connects to the other 15 in its chassis
+    (15 tiles);
+  * intra-group "row" links: every router connects to the 5 routers in the
+    same blade slot of the other chassis (3 tiles per connection);
+  * inter-group: up to 10 optical links per router; systems bundle several
+    tiles per group pair.  We expose `global_links_per_pair` parallel links
+    per group pair, attached to deterministic (chassis, blade) gateway slots.
+
+Link ids are arithmetic so the simulator can vectorize over flows:
+  [0, n_chassis_links)                 chassis links  (g, c, min(b), max(b))
+  [+0, n_row_links)                    row links      (g, min(c), max(c), b)
+  [+0, n_global_links)                 global links   (min(g), max(g), k)
+  [+0, n_nodes)                        NIC injection links (one per node)
+
+A *path* is a sequence of link ids (NIC link excluded; the simulator charges
+injection separately).  Minimal inter-group paths have <= 5 router-router
+hops, matching Figure 1's 5-hop example; non-minimal (Valiant) paths go
+through an intermediate group and have <= 8 hops (10 on the largest systems
+per §2.2 — we cap per topology size).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Sequence
+
+import numpy as np
+
+PAD = -1  # path padding entry
+
+
+@dataclass(frozen=True)
+class TopologyParams:
+    n_groups: int = 12
+    chassis_per_group: int = 6
+    blades_per_chassis: int = 16
+    nodes_per_blade: int = 4
+    global_links_per_pair: int = 4
+    # Bandwidths, paper §2.1: 4.7 (optical) .. 5.25 (electrical) GB/s/dir.
+    electrical_gbs: float = 5.25
+    optical_gbs: float = 4.7
+    nic_gbs: float = 10.0           # x16 PCIe Gen3 ~ 10+ GB/s effective
+    hop_latency_ns: float = 100.0   # per router-router hop
+    nic_latency_ns: float = 600.0   # NIC+PCIe fixed overhead per direction
+
+    @property
+    def routers_per_group(self) -> int:
+        return self.chassis_per_group * self.blades_per_chassis
+
+    @property
+    def n_routers(self) -> int:
+        return self.n_groups * self.routers_per_group
+
+    @property
+    def n_nodes(self) -> int:
+        return self.n_routers * self.nodes_per_blade
+
+
+class DragonflyTopology:
+    def __init__(self, params: TopologyParams = TopologyParams()):
+        p = self.params = params
+        G, C, B = p.n_groups, p.chassis_per_group, p.blades_per_chassis
+        # Links are DIRECTED (Aries links are full duplex: one channel per
+        # direction) — each undirected pair gets 2 ids via a parity bit.
+        self.n_chassis_links = G * C * B * B * 2      # (g,c,b1,b2,dir)
+        self.n_row_links = G * C * C * B * 2          # (g,c1,c2,b,dir)
+        self.n_global_links = G * G * p.global_links_per_pair * 2
+        self._row_off = self.n_chassis_links
+        self._glob_off = self._row_off + self.n_row_links
+        self._nic_off = self._glob_off + self.n_global_links
+        self.n_links = self._nic_off + p.n_nodes
+        # per-link capacity (GB/s)
+        cap = np.full(self.n_links, p.electrical_gbs, dtype=np.float64)
+        cap[self._glob_off:self._nic_off] = p.optical_gbs
+        cap[self._nic_off:] = p.nic_gbs
+        self.capacity_gbs = cap
+
+    # ------------------------------------------------------------- addressing
+    def node_coords(self, node: np.ndarray | int):
+        """node id -> (group, chassis, blade, slot)."""
+        p = self.params
+        node = np.asarray(node)
+        router, slot = divmod(node, p.nodes_per_blade)
+        group, r_in_g = divmod(router, p.routers_per_group)
+        chassis, blade = divmod(r_in_g, p.blades_per_chassis)
+        return group, chassis, blade, slot
+
+    def node_id(self, group: int, chassis: int, blade: int, slot: int) -> int:
+        p = self.params
+        return ((group * p.chassis_per_group + chassis)
+                * p.blades_per_chassis + blade) * p.nodes_per_blade + slot
+
+    def nic_link(self, node: np.ndarray | int):
+        return self._nic_off + np.asarray(node)
+
+    def chassis_link(self, g, c, b1, b2):
+        """Directed b1 -> b2 channel of the (g, c, {b1,b2}) chassis link."""
+        B = self.params.blades_per_chassis
+        lo, hi = np.minimum(b1, b2), np.maximum(b1, b2)
+        base = ((g * self.params.chassis_per_group + c) * B + lo) * B + hi
+        return base * 2 + (b1 > b2)
+
+    def row_link(self, g, c1, c2, b):
+        """Directed c1 -> c2 channel of the (g, {c1,c2}, b) row link."""
+        C = self.params.chassis_per_group
+        B = self.params.blades_per_chassis
+        lo, hi = np.minimum(c1, c2), np.maximum(c1, c2)
+        base = ((g * C + lo) * C + hi) * B + b
+        return self._row_off + base * 2 + (c1 > c2)
+
+    def global_link(self, g1, g2, k):
+        """Directed g1 -> g2 channel of global link k between the groups."""
+        G = self.params.n_groups
+        K = self.params.global_links_per_pair
+        lo, hi = np.minimum(g1, g2), np.maximum(g1, g2)
+        base = (lo * G + hi) * K + k
+        return self._glob_off + base * 2 + (g1 > g2)
+
+    def link_kind(self, link: int) -> str:
+        if link < self._row_off:
+            return "chassis"
+        if link < self._glob_off:
+            return "row"
+        if link < self._nic_off:
+            return "global"
+        return "nic"
+
+    # ---------------------------------------------------------- gateway slots
+    def gateway_router(self, g_here, g_there, k):
+        """(chassis, blade) of the router in g_here owning global link k
+        toward g_there.  Deterministic spread over the group's routers."""
+        R = self.params.routers_per_group
+        h = (np.asarray(g_there) * self.params.global_links_per_pair
+             + np.asarray(k)) * np.int64(2654435761) + np.asarray(g_here)
+        r = np.abs(h) % R
+        return divmod(r, self.params.blades_per_chassis)
+
+    # ------------------------------------------------- scalar path enumeration
+    def intra_group_hops(self, g, c1, b1, c2, b2, order_cb: bool = True):
+        """<=2-hop minimal route within a group; `order_cb` picks
+        chassis-then-row vs row-then-chassis for the 2-hop case."""
+        if c1 == c2 and b1 == b2:
+            return []
+        if c1 == c2:
+            return [self.chassis_link(g, c1, b1, b2)]
+        if b1 == b2:
+            return [self.row_link(g, c1, c2, b1)]
+        if order_cb:
+            return [self.chassis_link(g, c1, b1, b2),
+                    self.row_link(g, c1, c2, b2)]
+        return [self.row_link(g, c1, c2, b1),
+                self.chassis_link(g, c2, b1, b2)]
+
+    def minimal_path(self, src_node: int, dst_node: int, k: int = 0,
+                     order_seed: int = 0) -> list[int]:
+        """One minimal path (router-router links only) using global link k
+        for the inter-group hop."""
+        g1, c1, b1, _ = self.node_coords(src_node)
+        g2, c2, b2, _ = self.node_coords(dst_node)
+        if g1 == g2:
+            return self.intra_group_hops(g1, c1, b1, c2, b2,
+                                         order_cb=bool((order_seed + k) % 2))
+        gc1, gb1 = self.gateway_router(g1, g2, k)
+        gc2, gb2 = self.gateway_router(g2, g1, k)
+        path = self.intra_group_hops(g1, c1, b1, int(gc1), int(gb1),
+                                     order_cb=bool(order_seed % 2))
+        path.append(int(self.global_link(g1, g2, k)))
+        path += self.intra_group_hops(g2, int(gc2), int(gb2), c2, b2,
+                                      order_cb=bool((order_seed // 2) % 2))
+        return path
+
+    def nonminimal_path(self, src_node: int, dst_node: int, gi: int,
+                        k1: int = 0, k2: int = 0) -> list[int]:
+        """Valiant path through intermediate group gi (for intra-group flows
+        gi is interpreted as an intermediate *router* seed)."""
+        g1, c1, b1, _ = self.node_coords(src_node)
+        g2, c2, b2, _ = self.node_coords(dst_node)
+        if g1 == g2:
+            # Non-minimal within a group: detour via intermediate router.
+            R = self.params.routers_per_group
+            r = (gi * 40503 + 7) % R
+            ci, bi = divmod(r, self.params.blades_per_chassis)
+            return (self.intra_group_hops(g1, c1, b1, ci, bi) +
+                    self.intra_group_hops(g1, ci, bi, c2, b2, order_cb=False))
+        gi = gi % self.params.n_groups
+        if gi in (g1, g2):
+            gi = (gi + 1) % self.params.n_groups
+            if gi in (g1, g2):
+                gi = (gi + 1) % self.params.n_groups
+        # src group -> gi
+        gc1, gb1 = self.gateway_router(g1, gi, k1)
+        path = self.intra_group_hops(g1, c1, b1, int(gc1), int(gb1))
+        path.append(int(self.global_link(g1, gi, k1)))
+        # across gi: entry router -> exit gateway
+        ec, eb = self.gateway_router(gi, g1, k1)
+        xc, xb = self.gateway_router(gi, g2, k2)
+        path += self.intra_group_hops(gi, int(ec), int(eb), int(xc), int(xb))
+        path.append(int(self.global_link(gi, g2, k2)))
+        # entry in g2 -> dst
+        gc2, gb2 = self.gateway_router(g2, gi, k2)
+        path += self.intra_group_hops(g2, int(gc2), int(gb2), c2, b2,
+                                      order_cb=False)
+        return path
+
+    # ------------------------------------------------ vectorized candidates
+    MAX_HOPS = 8
+
+    def _intra_vec(self, g, c1, b1, c2, b2, order_cb):
+        """Vectorized <=2-hop intra-group route. All args int64 [n];
+        order_cb bool [n]. Returns [n, 2] PAD-padded link ids."""
+        n = g.shape[0]
+        out = np.full((n, 2), PAD, dtype=np.int64)
+        same = (c1 == c2) & (b1 == b2)
+        samec = (c1 == c2) & ~same
+        sameb = (b1 == b2) & ~same
+        two = ~(same | samec | sameb)
+        cl = self.chassis_link(g, c1, b1, b2)
+        rl = self.row_link(g, c1, c2, b1)
+        out[samec, 0] = cl[samec]
+        out[sameb, 0] = rl[sameb]
+        cb2 = self.row_link(g, c1, c2, b2)
+        rc2 = self.chassis_link(g, c2, b1, b2)
+        use_cb = two & order_cb
+        use_rc = two & ~order_cb
+        out[use_cb, 0] = cl[use_cb]
+        out[use_cb, 1] = cb2[use_cb]
+        out[use_rc, 0] = rl[use_rc]
+        out[use_rc, 1] = rc2[use_rc]
+        return out
+
+    def _minimal_vec(self, g1, c1, b1, g2, c2, b2, k, order_seed):
+        """Vectorized minimal path -> [n, MAX_HOPS] (slots 5.. are PAD)."""
+        n = g1.shape[0]
+        out = np.full((n, self.MAX_HOPS), PAD, dtype=np.int64)
+        intra = g1 == g2
+        gc1, gb1 = self.gateway_router(g1, g2, k)
+        # src-side target: dst coords for intra flows, gateway otherwise
+        tc = np.where(intra, c2, gc1)
+        tb = np.where(intra, b2, gb1)
+        out[:, 0:2] = self._intra_vec(g1, c1, b1, tc, tb,
+                                      ((order_seed + k) % 2 == 1) & intra
+                                      | (order_seed % 2 == 1) & ~intra)
+        gl = self.global_link(g1, g2, k)
+        inter = ~intra
+        out[inter, 2] = gl[inter]
+        gc2, gb2 = self.gateway_router(g2, g1, k)
+        dst_side = self._intra_vec(g2, gc2, gb2, c2, b2,
+                                   (order_seed // 2) % 2 == 1)
+        out[inter, 3:5] = dst_side[inter]
+        return out
+
+    def _nonmin_vec(self, g1, c1, b1, g2, c2, b2, gi, k1, k2):
+        """Vectorized Valiant path -> [n, MAX_HOPS]."""
+        n = g1.shape[0]
+        G = self.params.n_groups
+        R = self.params.routers_per_group
+        B = self.params.blades_per_chassis
+        out = np.full((n, self.MAX_HOPS), PAD, dtype=np.int64)
+        intra = g1 == g2
+        # --- intra-group detour via intermediate router (seed = raw gi)
+        r = (gi * 40503 + 7) % R
+        ci, bi = divmod(r, B)
+        seg_a = self._intra_vec(g1, c1, b1, ci, bi, np.ones(n, dtype=bool))
+        seg_b = self._intra_vec(g1, ci, bi, c2, b2, np.zeros(n, dtype=bool))
+        out[intra, 0:2] = seg_a[intra]
+        out[intra, 2:4] = seg_b[intra]
+        # --- inter-group Valiant through gi (collision-adjusted like scalar)
+        gim = gi % G
+        gim = np.where((gim == g1) | (gim == g2), (gim + 1) % G, gim)
+        gim = np.where((gim == g1) | (gim == g2), (gim + 1) % G, gim)
+        ones = np.ones(n, dtype=bool)
+        gc1, gb1 = self.gateway_router(g1, gim, k1)
+        seg1 = self._intra_vec(g1, c1, b1, gc1, gb1, ones)
+        glob1 = self.global_link(g1, gim, k1)
+        ec, eb = self.gateway_router(gim, g1, k1)
+        xc, xb = self.gateway_router(gim, g2, k2)
+        seg2 = self._intra_vec(gim, ec, eb, xc, xb, ones)
+        glob2 = self.global_link(gim, g2, k2)
+        gc2, gb2 = self.gateway_router(g2, gim, k2)
+        seg3 = self._intra_vec(g2, gc2, gb2, c2, b2, ~ones)
+        inter = ~intra
+        out[inter, 0:2] = seg1[inter]
+        out[inter, 2] = glob1[inter]
+        out[inter, 3:5] = seg2[inter]
+        out[inter, 5] = glob2[inter]
+        out[inter, 6:8] = seg3[inter]
+        return out
+
+    def candidate_paths(self, src: np.ndarray, dst: np.ndarray,
+                        rng: np.random.Generator, n_min: int = 2,
+                        n_nonmin: int = 2):
+        """Vectorized candidate generation (paper §2.2: two minimal and two
+        non-minimal paths are randomly selected per packet).
+
+        Returns (links, is_nonmin):
+          links:     int64 [n_flows, n_min+n_nonmin, MAX_HOPS], PAD-filled
+          is_nonmin: bool  [n_min+n_nonmin]
+        """
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        n = src.shape[0]
+        K = self.params.global_links_per_pair
+        G = self.params.n_groups
+        ncand = n_min + n_nonmin
+        g1, c1, b1, _ = self.node_coords(src)
+        g2, c2, b2, _ = self.node_coords(dst)
+        # Aries draws 2 minimal + 2 non-minimal candidates PER PACKET; over a
+        # whole message the union of draws covers all K global links.  The
+        # fluid equivalent: the n_min minimal candidates use DISTINCT global
+        # links ((k0+j) mod K), so spray weights can spread over all of them.
+        k0 = rng.integers(0, K, size=n)
+        gis = rng.integers(0, max(G, 1), size=(n_nonmin, n))
+        knm = rng.integers(0, K, size=(2 * n_nonmin, n))
+        seeds = rng.integers(0, 4, size=(n_min, n))
+        cands = []
+        for j in range(n_min):
+            cands.append(self._minimal_vec(g1, c1, b1, g2, c2, b2,
+                                           (k0 + j) % K, seeds[j]))
+        for j in range(n_nonmin):
+            cands.append(self._nonmin_vec(g1, c1, b1, g2, c2, b2, gis[j],
+                                          knm[2 * j], knm[2 * j + 1]))
+        links = np.stack(cands, axis=1)
+        # same-node flows have no hops at all
+        links[src == dst] = PAD
+        is_nonmin = np.array([False] * n_min + [True] * n_nonmin)
+        return links, is_nonmin
+
+    def candidate_paths_scalar(self, src: int, dst: int, *, k: int = 0,
+                               gi: int = 0, order_seed: int = 0):
+        """Scalar oracle for property tests: (minimal, nonminimal) paths
+        built with the pure-python enumerators."""
+        mn = self.minimal_path(src, dst, k=k, order_seed=order_seed) \
+            if src != dst else []
+        nm = self.nonminimal_path(src, dst, gi=gi, k1=k, k2=k) \
+            if src != dst else []
+        return mn, nm
+
+
+@dataclass(frozen=True)
+class Allocation:
+    """A fixed process->node mapping (paper §3.1: fix the allocation)."""
+
+    allocation_id: str
+    nodes: tuple  # node ids, rank r runs on nodes[r]
+
+    @property
+    def n_ranks(self) -> int:
+        return len(self.nodes)
+
+    def node_of(self, rank: int) -> int:
+        return self.nodes[rank]
+
+
+def make_allocation(topo: DragonflyTopology, n_ranks: int, *, spread: str,
+                    seed: int = 0, allocation_id: str | None = None
+                    ) -> Allocation:
+    """Build allocations matching the paper's placement tiers.
+
+    spread: 'inter_nodes' (same blade), 'inter_blades' (same chassis),
+            'inter_chassis' (same group, different chassis),
+            'inter_groups' (different groups),
+            'scattered' (random over the machine — production-like),
+            'contiguous' (fill blades in order).
+    """
+    p = topo.params
+    rng = np.random.default_rng(seed)
+    if spread == "inter_nodes":
+        assert n_ranks <= p.nodes_per_blade
+        base = int(rng.integers(0, topo.params.n_routers)) * p.nodes_per_blade
+        nodes = [base + i for i in range(n_ranks)]
+    elif spread == "inter_blades":
+        g = int(rng.integers(0, p.n_groups))
+        c = int(rng.integers(0, p.chassis_per_group))
+        blades = rng.choice(p.blades_per_chassis,
+                            size=min(n_ranks, p.blades_per_chassis),
+                            replace=False)
+        nodes = [topo.node_id(g, c, int(blades[i % len(blades)]),
+                              i // len(blades)) for i in range(n_ranks)]
+    elif spread == "inter_chassis":
+        g = int(rng.integers(0, p.n_groups))
+        cs = rng.permutation(p.chassis_per_group)
+        nodes = [topo.node_id(g, int(cs[i % p.chassis_per_group]),
+                              (i // p.chassis_per_group) % p.blades_per_chassis,
+                              0) for i in range(n_ranks)]
+    elif spread == "inter_groups":
+        gs = rng.permutation(p.n_groups)
+        per_g = -(-n_ranks // p.n_groups)
+        nodes = []
+        for i in range(n_ranks):
+            g = int(gs[i % p.n_groups])
+            j = i // p.n_groups
+            c, rem = divmod(j, p.blades_per_chassis)
+            nodes.append(topo.node_id(g, c % p.chassis_per_group,
+                                      rem, 0))
+        del per_g
+    elif spread.startswith("groups:"):
+        # production-style: ranks packed into a random subset of k groups
+        # (paper Fig. 8: 1024 nodes on 257 routers spanning 6 groups)
+        k = min(int(spread.split(":")[1]), p.n_groups)
+        gs = rng.choice(p.n_groups, size=k, replace=False)
+        nodes_per_group = p.routers_per_group * p.nodes_per_blade
+        pool = np.stack([
+            g * nodes_per_group + rng.permutation(nodes_per_group)
+            for g in gs])                       # [k, nodes_per_group]
+        # interleave across the chosen groups (rank i -> group i mod k)
+        nodes = list(pool.T.ravel()[:n_ranks])
+    elif spread == "scattered":
+        nodes = list(rng.choice(p.n_nodes, size=n_ranks, replace=False))
+    elif spread == "contiguous":
+        start = int(rng.integers(0, max(1, p.n_nodes - n_ranks)))
+        nodes = list(range(start, start + n_ranks))
+    else:
+        raise ValueError(f"unknown spread {spread!r}")
+    return Allocation(
+        allocation_id=allocation_id or f"{spread}-{seed}",
+        nodes=tuple(int(x) for x in nodes),
+    )

@@ -1,0 +1,11 @@
+# repro.kernels — Pallas TPU kernels for the framework's compute hot-spots.
+#
+# The paper (application-aware routing) has no kernel-level contribution —
+# per DESIGN.md §8 these kernels serve the FRAMEWORK's perf-critical layers:
+#   flash_attention/  blocked online-softmax GQA attention (train/prefill)
+#   ssd_scan/         Mamba2 SSD within-chunk quadratic block
+#   rmsnorm/          fused RMSNorm
+#
+# Each kernel directory holds <name>.py (pl.pallas_call + BlockSpec VMEM
+# tiling), ops.py (jit'd wrapper, interpret=True on CPU), ref.py (pure-jnp
+# oracle the tests assert against).

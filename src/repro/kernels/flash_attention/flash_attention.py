@@ -1,0 +1,126 @@
+"""Blocked causal GQA flash attention — Pallas TPU kernel.
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks); the kv dimension is
+the innermost ("arbitrary") axis, accumulated across steps via VMEM scratch
+(online softmax: running max m, normalizer l, accumulator acc).
+
+BlockSpec tiling (VMEM working set per grid step):
+    q   [1, 1, block_q, head_dim]
+    k,v [1, 1, block_k, head_dim]     (kv head = q head // group)
+    acc [block_q, head_dim] fp32 scratch + m,l [block_q, 1] fp32 scratch
+
+Defaults block_q = block_k = 512 with head_dim 128: working set
+~(512*128*2)*3 bytes + fp32 scratch ~ 0.7 MB — comfortably inside the
+16 MB v5e VMEM while keeping the MXU matmul dims (block, 128) aligned.
+
+Causal blocks with q_block < k_block are skipped entirely (the index map
+still runs, so we guard with pl.when on the compute).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  num_kv_blocks: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)               # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)               # [bk, hd]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [bq, bk]
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_scr[...]                               # [bq, 1]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)        # [bq, 1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                            # [bq, bk]
+        alpha = jnp.exp(m_prev - m_new)                   # [bq, 1]
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    if causal:
+        # skip fully-masked blocks (strictly above the diagonal)
+        pl.when(ki * block_k <= qi * block_q + block_q - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False):
+    """q: [B, H, Sq, hd]; k, v: [B, Hkv, Skv, hd] -> [B, H, Sq, hd]."""
+    B, H, Sq, hd = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert H % Hkv == 0, (H, Hkv)
+    group = H // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    nq, nk = Sq // bq, Skv // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, block_q=bq, block_k=bk,
+        num_kv_blocks=nk)
+    grid = (B, H, nq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, group=group: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, group=group: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            _scratch((bq, 1)),      # running max m
+            _scratch((bq, 1)),      # running normalizer l
+            _scratch((bq, hd)),     # fp32 output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

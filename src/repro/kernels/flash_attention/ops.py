@@ -1,0 +1,31 @@
+"""jit'd public wrapper for the flash attention kernel.
+
+On TPU the Pallas kernel runs natively; everywhere else (this CPU
+container) it runs in interpret mode, or falls back to the jnp reference
+for large shapes where interpretation would be slow.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention_op(q, k, v, *, causal: bool = True,
+                       block_q: int = 512, block_k: int = 512,
+                       force_kernel: bool = False):
+    """Dispatch: Pallas kernel on TPU (or when forced, in interpret mode);
+    jnp reference otherwise."""
+    if _on_tpu():
+        return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=False)
+    if force_kernel:
+        return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=True)
+    return attention_ref(q, k, v, causal=causal)

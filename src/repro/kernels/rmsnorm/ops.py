@@ -1,0 +1,20 @@
+"""jit'd public wrapper for the fused RMSNorm kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm_fused
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def rmsnorm_op(x, gamma, *, eps: float = 1e-5, force_kernel: bool = False):
+    if _on_tpu():
+        return rmsnorm_fused(x, gamma, eps=eps, interpret=False)
+    if force_kernel:
+        return rmsnorm_fused(x, gamma, eps=eps, interpret=True)
+    return rmsnorm_ref(x, gamma, eps=eps)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel (same as models.common)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, gamma, *, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps))
+            * gamma.astype(jnp.float32)).astype(dt)

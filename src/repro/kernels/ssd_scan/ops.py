@@ -1,0 +1,64 @@
+"""jit'd public wrapper: full SSD scan built on the within-chunk kernel.
+
+Composes the Pallas within-chunk block with the cheap cross-chunk state
+recurrence + off-diagonal term, reproducing models.mamba2.ssd_chunked
+exactly (the test asserts equality against it)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ref import ssd_inner_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_inner
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssd_scan_op(x, dt, a_log, b_mat, c_mat, chunk: int, *,
+                init_state=None, force_kernel: bool = False):
+    """Same contract as models.mamba2.ssd_chunked; Pallas inner block."""
+    B, S, H, P = x.shape
+    N = b_mat.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:          # match models.mamba2: largest divisor <= chunk
+        Q -= 1
+    Nc = S // Q
+    f32 = jnp.float32
+
+    A = -jnp.exp(a_log.astype(f32))
+    xb = x.reshape(B, Nc, Q, H, P).astype(f32)
+    dtb = dt.reshape(B, Nc, Q, H).astype(f32)
+    Bb = b_mat.reshape(B, Nc, Q, H, N).astype(f32)
+    Cb = c_mat.reshape(B, Nc, Q, H, N).astype(f32)
+    xdt = (xb * dtb[..., None]).transpose(0, 1, 3, 2, 4)   # [B,Nc,H,Q,P]
+    dacum = jnp.cumsum(dtb * A, axis=2).transpose(0, 1, 3, 2)  # [B,Nc,H,Q]
+    b_t = Bb.transpose(0, 1, 3, 2, 4)
+    c_t = Cb.transpose(0, 1, 3, 2, 4)
+
+    if _on_tpu():
+        y_diag, states = ssd_inner(xdt, b_t, c_t, dacum, interpret=False)
+    elif force_kernel:
+        y_diag, states = ssd_inner(xdt, b_t, c_t, dacum, interpret=True)
+    else:
+        y_diag, states = ssd_inner_ref(xdt, b_t, c_t, dacum)
+
+    # cross-chunk recurrence + off-diagonal term (cheap, outside kernel)
+    chunk_decay = jnp.exp(dacum[..., -1])                  # [B,Nc,H]
+    s0 = (init_state.astype(f32) if init_state is not None
+          else jnp.zeros((B, H, N, P), f32))
+
+    def step(s, inp):
+        cd, st = inp
+        return cd[..., None, None] * s + st, s
+
+    final, entering = jax.lax.scan(
+        step, s0, (jnp.moveaxis(chunk_decay, 1, 0),
+                   jnp.moveaxis(states, 1, 0)))
+    entering = jnp.moveaxis(entering, 0, 1)                # [B,Nc,H,N,P]
+    y_off = jnp.einsum("bchqn,bchnp,bchq->bchqp",
+                       c_t, entering, jnp.exp(dacum))
+    y = (y_diag + y_off).transpose(0, 1, 3, 2, 4).reshape(B, S, H, P)
+    return y.astype(x.dtype), final

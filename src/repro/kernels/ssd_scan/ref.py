@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the SSD within-chunk kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_inner_ref(xdt, b_mat, c_mat, dacum):
+    """Same contract as ssd_scan.ssd_inner (fp32 math)."""
+    xdt = xdt.astype(jnp.float32)
+    b_mat = b_mat.astype(jnp.float32)
+    c_mat = c_mat.astype(jnp.float32)
+    dacum = dacum.astype(jnp.float32)
+    Q = xdt.shape[-2]
+    diff = dacum[..., :, None] - dacum[..., None, :]      # [B,Nc,H,i,j]
+    ii = jnp.arange(Q)
+    L = jnp.where(ii[:, None] >= ii[None, :], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bchin,bchjn->bchij", c_mat, b_mat)
+    y = jnp.einsum("bchij,bchjp->bchip", cb * L, xdt)
+    decay_last = jnp.exp(dacum[..., -1:] - dacum)          # [B,Nc,H,Q]
+    states = jnp.einsum("bchq,bchqn,bchqp->bchnp", decay_last, b_mat, xdt)
+    return y, states

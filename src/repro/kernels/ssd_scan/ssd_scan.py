@@ -1,0 +1,80 @@
+"""Mamba2 SSD within-chunk block — Pallas TPU kernel.
+
+Computes, for each (batch, chunk, head) grid cell, the quadratic
+within-chunk term and the chunk-final state of the SSD decomposition
+(arXiv:2405.21060):
+
+    y_diag[i] = sum_{j<=i} (C_i . B_j) * exp(dAcum_i - dAcum_j) * xdt_j
+    state     = sum_j exp(dAcum_last - dAcum_j) * B_j^T xdt_j     [N, P]
+
+The cross-chunk recurrence (a cheap [N,P]-state scan over chunks) and the
+off-diagonal C_i.state_entering term stay outside the kernel (see ops.py) —
+they are O(S*N*P) and bandwidth-trivial next to the O(S*Q*(N+P)) block.
+
+BlockSpec tiling per grid step (VMEM):
+    xdt [Q, P], B/C [Q, N], dAcum [1, Q] -> y [Q, P], state [N, P]
+    With Q=128 (chunk), P=64, N=128: ~0.2 MB — MXU-aligned matmuls
+    (Q x N @ N x Q, Q x Q @ Q x P).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(xdt_ref, b_ref, c_ref, dacum_ref, y_ref, state_ref):
+    xdt = xdt_ref[0, 0, 0].astype(jnp.float32)        # [Q, P]
+    b = b_ref[0, 0, 0].astype(jnp.float32)            # [Q, N]
+    c = c_ref[0, 0, 0].astype(jnp.float32)            # [Q, N]
+    dacum = dacum_ref[0, 0, 0].astype(jnp.float32)    # [Q]
+    Q = xdt.shape[0]
+
+    # decay matrix L[i,j] = exp(dacum_i - dacum_j) for j <= i else 0
+    diff = dacum[:, None] - dacum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(jj <= ii, jnp.exp(diff), 0.0)
+
+    cb = jnp.dot(c, b.T, preferred_element_type=jnp.float32)   # [Q, Q]
+    y_ref[0, 0, 0] = jnp.dot(cb * L, xdt,
+                             preferred_element_type=jnp.float32
+                             ).astype(y_ref.dtype)
+
+    decay_last = jnp.exp(dacum[-1] - dacum)                    # [Q]
+    state_ref[0, 0, 0] = jnp.dot((b * decay_last[:, None]).T, xdt,
+                                 preferred_element_type=jnp.float32
+                                 ).astype(state_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_inner(xdt, b_mat, c_mat, dacum, *, interpret: bool = False):
+    """xdt: [B,Nc,H,Q,P]; b/c_mat: [B,Nc,H,Q,N]; dacum: [B,Nc,H,Q].
+
+    Returns (y_diag [B,Nc,H,Q,P], states [B,Nc,H,N,P]) — both fp32.
+    """
+    B, Nc, H, Q, P = xdt.shape
+    N = b_mat.shape[-1]
+    grid = (B, Nc, H)
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, N), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, N), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, c, h: (b, c, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, N, P), lambda b, c, h: (b, c, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Nc, H, Q, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, Nc, H, N, P), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xdt, b_mat, c_mat, dacum)

@@ -1,0 +1,3 @@
+# repro.launch — production mesh, multi-pod dry-run, train/serve drivers.
+# NOTE: do not import repro.launch.dryrun from library code — it sets
+# XLA_FLAGS at import time (must be the process's first jax-affecting act).

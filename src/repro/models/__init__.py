@@ -1,0 +1,15 @@
+# repro.models — composable model definitions for all assigned architecture
+# families: dense GQA transformers, MoE, Mamba2 (SSD), hybrid (zamba2-like),
+# encoder-decoder (whisper backbone), and VLM (paligemma backbone).
+#
+# All models are pure functions over parameter pytrees with stacked
+# (lax.scan-able) block parameters, so the production train/serve graphs
+# stay small enough to compile for 512-device meshes on one CPU.
+
+from repro.models.common import ModelConfig, Family
+from repro.models.registry import init_params, train_forward, make_decode_state, decode_step, prefill
+
+__all__ = [
+    "ModelConfig", "Family", "init_params", "train_forward",
+    "make_decode_state", "decode_step", "prefill",
+]

@@ -1,0 +1,213 @@
+"""Grouped-query attention with RoPE and a sharded KV cache.
+
+Used by dense/moe/vlm decoders, the hybrid model's shared attention block,
+and the whisper encoder/decoder (with `causal=False` / cross-attention).
+The hot loop can be swapped for the Pallas flash kernel via cfg-level
+`use_flash` (TPU target; CPU tests run the pure-jnp path, which is also the
+oracle the kernel is validated against).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ModelConfig, apply_rope, constrain,
+                                 dense_init, dp_spec, mesh_axes)
+
+
+def init_attn(key, cfg: ModelConfig, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    hd = cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, cfg.param_dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, cfg.param_dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, cfg.param_dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, cfg.param_dtype,
+                         scale=1.0 / math.sqrt(cfg.n_heads * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), cfg.param_dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), cfg.param_dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), cfg.param_dtype)
+    return p
+
+
+def qkv_project(p, x, cfg: ModelConfig, positions, *, rope: bool = True):
+    """x: [B,S,D] -> q [B,S,H,hd], k/v [B,S,Hkv,hd] (RoPE applied)."""
+    B, S, _ = x.shape
+    hd = cfg.hd
+    dt = cfg.dtype
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    # Pin sane layouts (GSPMD otherwise partially shards hd after the
+    # un-merge reshape, paying a logits-sized all-reduce per q-chunk):
+    # heads over "model" when divisible; else context-parallel q (seq over
+    # "model") with replicated k/v.
+    dp = dp_spec()
+    tp_ok_q = cfg.n_heads and mesh_axes().get("model", 1) and \
+        cfg.n_heads % max(mesh_axes().get("model", 1), 1) == 0
+    if tp_ok_q:
+        q = constrain(q, dp, None, "model", None)
+    elif S > 1:
+        q = constrain(q, dp, "model", None, None)
+    else:
+        q = constrain(q, dp, None, None, None)
+    kv_ok = cfg.n_kv_heads and \
+        cfg.n_kv_heads % max(mesh_axes().get("model", 1), 1) == 0
+    if kv_ok:
+        k = constrain(k, dp, None, "model", None)
+        v = constrain(v, dp, None, "model", None)
+    else:
+        k = constrain(k, dp, None, None, None)
+        v = constrain(v, dp, None, None, None)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attend_dense(q, k, v, *, causal: bool, q_positions, kv_positions,
+                  kv_valid_len, prefix_len):
+    """Unchunked core.  q: [B,Sq,H,hd]; k/v: [B,Skv,Hkv,hd].
+
+    Wrapped in the "attn_core" named scope: every HLO op lowered from here
+    carries it in metadata, letting analysis/ identify exactly the traffic
+    the Pallas flash kernel eliminates on TPU (§Perf flash adjustment)."""
+    with jax.named_scope("attn_core"):
+        return _attend_dense_inner(q, k, v, causal=causal,
+                                   q_positions=q_positions,
+                                   kv_positions=kv_positions,
+                                   kv_valid_len=kv_valid_len,
+                                   prefix_len=prefix_len)
+
+
+def _attend_dense_inner(q, k, v, *, causal, q_positions, kv_positions,
+                        kv_valid_len, prefix_len):
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, G, Hkv, hd)
+    scale = 1.0 / math.sqrt(hd)
+    # bf16 inputs, f32 accumulation (MXU-native; avoids materializing an
+    # f32 copy of the KV cache)
+    logits = jnp.einsum("bqghd,bkhd->bghqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = None
+    if causal:
+        qp = q_positions if q_positions is not None \
+            else jnp.arange(Sq)[None, :]
+        kp = kv_positions if kv_positions is not None \
+            else jnp.arange(k.shape[1])[None, :]
+        mask = kp[:, None, :] <= qp[:, :, None]          # [B,Sq,Skv]
+        if prefix_len is not None:
+            # prefix-LM: full attention among the first prefix_len slots
+            in_pref = (kp[:, None, :] < prefix_len) \
+                & (qp[:, :, None] < prefix_len)
+            mask = mask | in_pref
+    if kv_valid_len is not None:
+        lim = jnp.arange(k.shape[1])[None, :] < kv_valid_len[:, None]
+        lim = jnp.broadcast_to(lim[:, None, :], (B, Sq, k.shape[1]))
+        mask = lim if mask is None else (mask & lim)
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bghqk,bkhd->bqghd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def _largest_divisor_le(n: int, cap: int) -> int:
+    for c in range(min(cap, n), 0, -1):
+        if n % c == 0:
+            return c
+    return n
+
+
+def gqa_attend(q, k, v, *, causal: bool, q_positions=None, kv_positions=None,
+               kv_valid_len=None, prefix_len=None, q_chunk: int = 1024):
+    """Reference grouped-query attention (flash-attention oracle).
+
+    q: [B,Sq,H,hd], k/v: [B,Skv,Hkv,hd].  H = G*Hkv.
+    Causal masking uses absolute positions so it works for train (Sq==Skv),
+    prefill, and decode (Sq==1 against a long cache).
+    kv_valid_len: [B] — mask cache slots >= this (decode, partial cache).
+    prefix_len: prefix-LM boundary (VLM image prefix attends bidirectionally).
+
+    Long queries are processed in q-chunks under lax.scan so the fp32
+    logits buffer stays [B,H,chunk,Skv] — the memory shape of the Pallas
+    flash kernel's outer loop (which replaces this path on TPU).
+    """
+    B, Sq, H, hd = q.shape
+    if Sq <= q_chunk:
+        return _attend_dense(q, k, v, causal=causal, q_positions=q_positions,
+                             kv_positions=kv_positions,
+                             kv_valid_len=kv_valid_len,
+                             prefix_len=prefix_len)
+    C = _largest_divisor_le(Sq, q_chunk)
+    nc = Sq // C
+    qp = q_positions if q_positions is not None \
+        else jnp.broadcast_to(jnp.arange(Sq)[None, :], (B, Sq))
+    q_r = jnp.moveaxis(q.reshape(B, nc, C, H, hd), 1, 0)       # [nc,B,C,H,hd]
+    qp_r = jnp.moveaxis(qp.reshape(B, nc, C), 1, 0)            # [nc,B,C]
+
+    def chunk_fn(_, inp):
+        qc, qpc = inp
+        out = _attend_dense(qc, k, v, causal=causal, q_positions=qpc,
+                            kv_positions=kv_positions,
+                            kv_valid_len=kv_valid_len,
+                            prefix_len=prefix_len)
+        return (), out
+
+    # checkpoint per chunk: the backward pass recomputes each chunk's
+    # logits instead of stashing [nc, B, H, chunk, Skv] fp32 across chunks
+    _, outs = jax.lax.scan(jax.checkpoint(chunk_fn), (), (q_r, qp_r))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, hd)
+
+
+def attn_output(p, o, cfg: ModelConfig):
+    B, S, H, hd = o.shape
+    out = jnp.einsum("bsh,hd->bsd", o.reshape(B, S, H * hd),
+                     p["wo"].astype(cfg.dtype))
+    # restore the canonical [dp, None, None] layout after attention (if the
+    # q path was context-parallel, this is the single all-gather point)
+    return constrain(out, dp_spec(), None, None)
+
+
+# ------------------------------------------------------------------ caching
+class KVCache(NamedTuple):
+    k: jax.Array      # [B, Smax, Hkv, hd]
+    v: jax.Array      # [B, Smax, Hkv, hd]
+    length: jax.Array  # [B] int32 — filled prefix length
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               n_layers: int | None = None) -> KVCache:
+    """Stacked cache for the scanned layer stack: leading dim = n_layers."""
+    L = n_layers if n_layers is not None else cfg.n_layers
+    shape = (L, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return KVCache(
+        k=jnp.zeros(shape, cfg.dtype),
+        v=jnp.zeros(shape, cfg.dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def cache_update(cache_k, cache_v, k_new, v_new, start: jax.Array):
+    """Insert k/v_new [B,S,Hkv,hd] at position `start` [] (same for batch)."""
+    ck = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype),
+                                      (0, start, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype),
+                                      (0, start, 0, 0))
+    return ck, cv

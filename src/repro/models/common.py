@@ -1,0 +1,230 @@
+"""Shared model configuration and primitive layers.
+
+One ModelConfig covers every assigned architecture family; family-specific
+fields are ignored elsewhere.  All parameters are created as stacked
+per-layer pytrees (leading dim = n_layers) so the layer stack runs under
+jax.lax.scan — this keeps compiled HLO size O(1) in depth, which matters
+for the 512-device dry-run on a single-core CPU container.
+"""
+
+from __future__ import annotations
+
+import enum
+import math
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Family(str, enum.Enum):
+    DENSE = "dense"
+    MOE = "moe"
+    SSM = "ssm"
+    HYBRID = "hybrid"
+    ENCDEC = "encdec"
+    VLM = "vlm"
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int            # 0 for attention-free (ssm)
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0       # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    act: str = "silu"           # silu => SwiGLU; gelu => GeGLU/plain
+    glu: bool = True
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0        # per-expert hidden size
+    router_aux_coef: float = 0.01
+    #: "einsum" = GShard-style dense dispatch (baseline); "ep" = shard_map
+    #: expert-parallel all-to-all (§Perf; needs n_experts % ep_size == 0)
+    moe_impl: str = "einsum"
+    #: a2a schedule for the EP path: "direct" (one-phase) or "hierarchical"
+    #: (pod-local first) — the knob Algorithm 1 drives on multi-pod meshes
+    moe_a2a_mode: str = "direct"
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    # --- hybrid (zamba2-like shared attention blocks) ---
+    shared_attn_period: int = 6
+    # --- enc-dec (whisper backbone; conv frontend is a stub) ---
+    n_encoder_layers: int = 0
+    encoder_frames: int = 1500
+    # --- vlm (paligemma backbone; SigLIP frontend is a stub) ---
+    img_tokens: int = 0
+    # --- compute ---
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+    #: "full" recomputes everything; "dots" saves non-batched matmul
+    #: outputs (qkv/mlp projections) and recomputes only elementwise +
+    #: attention internals — the §Perf middle ground between 1.33x
+    #: recompute FLOPs and a full activation stash
+    remat_policy: str = "full"
+    #: embeddings/heads are padded to a multiple of this (Megatron-style)
+    #: so the vocab dim shards evenly over the model axis
+    pad_vocab_multiple: int = 128
+    # documented skip: pure full-attention archs cannot run long_500k
+    supports_long_context: bool = False
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def vocab_padded(self) -> int:
+        m = max(self.pad_vocab_multiple, 1)
+        return -(-self.vocab // m) * m
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == Family.SSM
+
+    def scaled(self, **kw) -> "ModelConfig":
+        """Reduced copy for smoke tests."""
+        return replace(self, **kw)
+
+
+def checkpoint_wrap(fn, cfg: ModelConfig):
+    """jax.checkpoint with the config's remat policy (or passthrough)."""
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies
+            .dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# --------------------------------------------------------------------- utils
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return _init(key, (d_in, d_out), scale, dtype)
+
+
+def stacked(keys, fn):
+    """Stack per-layer params along a new leading axis (scan-compatible)."""
+    outs = [fn(k) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, 0), *outs)
+
+
+# ------------------------------------------------------------------- norms
+def rmsnorm(x, gamma, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * gamma
+
+
+def layernorm(x, gamma, beta, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(dt) * gamma + beta
+
+
+# -------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def activation(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+# ----------------------------------------------------- activation sharding
+def mesh_axes() -> dict:
+    """Axis sizes of the active abstract mesh ({} outside set_mesh)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:  # pragma: no cover
+        return {}
+    if mesh is None or not mesh.axis_names:
+        return {}
+    return {a: mesh.shape[a] for a in mesh.axis_names}
+
+
+def dp_spec():
+    axes = mesh_axes()
+    if "pod" in axes and "data" in axes:
+        return ("pod", "data")
+    if "data" in axes:
+        return "data"
+    return None
+
+
+def constrain(x, *spec):
+    """Divisibility-checked with_sharding_constraint; no-op off-mesh.
+
+    Each spec entry is None, an axis name, or a tuple of axis names; any
+    entry whose axes are missing from the active mesh or whose dim does not
+    divide evenly is dropped to None.  This is how model code pins
+    activation layouts (e.g. attention heads over "model" when divisible,
+    else sequence/context parallelism) without importing mesh objects."""
+    from jax.sharding import PartitionSpec as P
+
+    axes = mesh_axes()
+    if not axes:
+        return x
+    cleaned = []
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            cleaned.append(None)
+            continue
+        group = ax if isinstance(ax, tuple) else (ax,)
+        if not all(a in axes for a in group):
+            cleaned.append(None)
+            continue
+        size = 1
+        for a in group:
+            size *= axes[a]
+        cleaned.append(ax if dim % size == 0 and dim >= size else None)
+    cleaned += [None] * (x.ndim - len(cleaned))
+    return jax.lax.with_sharding_constraint(x, P(*cleaned))

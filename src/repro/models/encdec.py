@@ -1,0 +1,223 @@
+"""Encoder-decoder backbone (whisper-large-v3 shape).
+
+The mel-spectrogram conv frontend is a STUB per the assignment: the model
+consumes precomputed frame embeddings [B, frames, D] (what the two conv
+layers would produce).  Encoder = non-causal self-attn stack; decoder =
+causal self-attn + cross-attn + MLP, all scanned.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import (ModelConfig, checkpoint_wrap,
+                                 dense_init, rmsnorm, stacked)
+from repro.models.mlp import init_mlp, mlp
+
+
+def init_enc_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "attn": attn.init_attn(ks[0], cfg),
+        "ln2": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "mlp": init_mlp(ks[1], cfg),
+    }
+
+
+def init_dec_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "self_attn": attn.init_attn(ks[0], cfg),
+        "ln_x": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "cross_attn": attn.init_attn(ks[1], cfg),
+        "ln2": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "mlp": init_mlp(ks[2], cfg),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    return {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab_padded, cfg.d_model))
+                  * 0.02).astype(cfg.param_dtype),
+        "pos_enc": (jax.random.normal(ks[1], (cfg.encoder_frames,
+                                               cfg.d_model))
+                    * 0.02).astype(cfg.param_dtype),
+        "enc_blocks": stacked(jax.random.split(ks[2], cfg.n_encoder_layers),
+                              partial(init_enc_block, cfg=cfg)),
+        "enc_ln": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "dec_blocks": stacked(jax.random.split(ks[3], cfg.n_layers),
+                              partial(init_dec_block, cfg=cfg)),
+        "ln_f": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "lm_head": dense_init(ks[4], cfg.d_model, cfg.vocab_padded,
+                              cfg.param_dtype, scale=0.02),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: [B, F, D] (stub conv output) -> encoder states [B, F, D]."""
+    F = frames.shape[1]
+    x = frames.astype(cfg.dtype) + params["pos_enc"][:F].astype(cfg.dtype)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(jnp.arange(F)[None, :], (B, F))
+
+    def body(h, lp):
+        hn = rmsnorm(h, lp["ln1"].astype(cfg.dtype), cfg.norm_eps)
+        q, k, v = attn.qkv_project(lp["attn"], hn, cfg, positions,
+                                   rope=False)
+        o = attn.gqa_attend(q, k, v, causal=False)
+        h = h + attn.attn_output(lp["attn"], o, cfg)
+        hn = rmsnorm(h, lp["ln2"].astype(cfg.dtype), cfg.norm_eps)
+        return h + mlp(lp["mlp"], hn, cfg), ()
+
+    body_fn = checkpoint_wrap(body, cfg)
+    x, _ = jax.lax.scan(body_fn, x, params["enc_blocks"])
+    return rmsnorm(x, params["enc_ln"].astype(cfg.dtype), cfg.norm_eps)
+
+
+def _dec_block(lp, h, enc, cfg, positions):
+    hn = rmsnorm(h, lp["ln1"].astype(cfg.dtype), cfg.norm_eps)
+    q, k, v = attn.qkv_project(lp["self_attn"], hn, cfg, positions)
+    o = attn.gqa_attend(q, k, v, causal=True, q_positions=positions,
+                        kv_positions=positions)
+    h = h + attn.attn_output(lp["self_attn"], o, cfg)
+    hn = rmsnorm(h, lp["ln_x"].astype(cfg.dtype), cfg.norm_eps)
+    B, F, _ = enc.shape
+    enc_pos = jnp.broadcast_to(jnp.arange(F)[None, :], (B, F))
+    q2, _, _ = attn.qkv_project(lp["cross_attn"], hn, cfg, positions,
+                                rope=False)
+    _, k2, v2 = attn.qkv_project(lp["cross_attn"], enc, cfg, enc_pos,
+                                 rope=False)
+    o2 = attn.gqa_attend(q2, k2, v2, causal=False)
+    h = h + attn.attn_output(lp["cross_attn"], o2, cfg)
+    hn = rmsnorm(h, lp["ln2"].astype(cfg.dtype), cfg.norm_eps)
+    return h + mlp(lp["mlp"], hn, cfg), (k, v)
+
+
+def encdec_apply(params, frames, tokens, cfg: ModelConfig):
+    """Training forward -> (decoder logits, aux=0)."""
+    enc = encode(params, frames, cfg)
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(h, lp):
+        h, _ = _dec_block(lp, h, enc, cfg, positions)
+        return h, ()
+
+    body_fn = checkpoint_wrap(body, cfg)
+    x, _ = jax.lax.scan(body_fn, x, params["dec_blocks"])
+    x = rmsnorm(x, params["ln_f"].astype(cfg.dtype), cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(cfg.dtype))
+    return logits, jnp.zeros((), jnp.float32)
+
+
+# ------------------------------------------------------------------ serving
+class EncDecState(NamedTuple):
+    cache: attn.KVCache     # decoder self-attn cache [L, ...]
+    enc: jax.Array          # encoder states [B, F, D]
+    cross_k: jax.Array      # precomputed cross-attn keys   [L, B, F, Hkv, hd]
+    cross_v: jax.Array      # precomputed cross-attn values [L, B, F, Hkv, hd]
+    pos: jax.Array
+
+
+def encdec_make_state(cfg: ModelConfig, batch: int, max_len: int,
+                      enc=None) -> EncDecState:
+    enc = enc if enc is not None else jnp.zeros(
+        (batch, cfg.encoder_frames, cfg.d_model), cfg.dtype)
+    cross = jnp.zeros((cfg.n_layers, batch, cfg.encoder_frames,
+                       cfg.n_kv_heads, cfg.hd), cfg.dtype)
+    return EncDecState(cache=attn.init_cache(cfg, batch, max_len),
+                       enc=enc, cross_k=cross, cross_v=jnp.copy(cross),
+                       pos=jnp.zeros((), jnp.int32))
+
+
+def precompute_cross_kv(params, enc, cfg: ModelConfig):
+    """One-time cross-attention K/V projection of the encoder states.
+
+    §Perf hillclimb (whisper decode): the baseline re-projected K/V over
+    all 1500 frames **per generated token per layer** — ~99% of decode
+    FLOPs.  Hoisting it to prefill leaves decode with only the q-side
+    projection and the (cached) attention reads."""
+    B, F, _ = enc.shape
+    enc_pos = jnp.broadcast_to(jnp.arange(F)[None, :], (B, F))
+
+    def per_layer(_, lp):
+        _, k2, v2 = attn.qkv_project(lp["cross_attn"], enc, cfg, enc_pos,
+                                     rope=False)
+        return (), (k2, v2)
+
+    _, (ks, vs) = jax.lax.scan(per_layer, (), params["dec_blocks"])
+    return ks, vs
+
+
+def encdec_prefill(params, tokens, cfg: ModelConfig, state: EncDecState):
+    """Fill the decoder self-attn cache with the prompt (state.enc must
+    already hold the encoder output)."""
+    enc = state.enc
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    zero = jnp.zeros((), jnp.int32)
+
+    def body(h, inp):
+        lp, ck, cv = inp
+        h, (k, v) = _dec_block(lp, h, enc, cfg, positions)
+        ck, cv = attn.cache_update(ck, cv, k, v, zero)
+        return h, (ck, cv)
+
+    body_fn = checkpoint_wrap(body, cfg)
+    x, (cks, cvs) = jax.lax.scan(
+        body_fn, x, (params["dec_blocks"], state.cache.k, state.cache.v))
+    x = rmsnorm(x[:, -1:, :], params["ln_f"].astype(cfg.dtype), cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(cfg.dtype))
+    xk, xv = precompute_cross_kv(params, enc, cfg)
+    return logits, EncDecState(
+        cache=attn.KVCache(k=cks, v=cvs,
+                           length=jnp.full((B,), S, jnp.int32)),
+        enc=enc, cross_k=xk, cross_v=xv, pos=jnp.array(S, jnp.int32))
+
+
+def encdec_decode_step(params, token, cfg: ModelConfig, state: EncDecState):
+    x = params["embed"].astype(cfg.dtype)[token]
+    B = x.shape[0]
+    pos = state.pos
+    enc = state.enc
+
+    def body(h, inp):
+        lp, ck, cv, k2, v2 = inp
+        positions = jnp.broadcast_to(pos[None, None], (B, 1))
+        hn = rmsnorm(h, lp["ln1"].astype(cfg.dtype), cfg.norm_eps)
+        q, k, v = attn.qkv_project(lp["self_attn"], hn, cfg, positions)
+        ck, cv = attn.cache_update(ck, cv, k, v, pos)
+        valid = jnp.broadcast_to(pos + 1, (B,))
+        o = attn.gqa_attend(q, ck, cv, causal=False, kv_valid_len=valid)
+        h = h + attn.attn_output(lp["self_attn"], o, cfg)
+        hn = rmsnorm(h, lp["ln_x"].astype(cfg.dtype), cfg.norm_eps)
+        q2, _, _ = attn.qkv_project(lp["cross_attn"], hn, cfg, positions,
+                                    rope=False)
+        # cross-attn K/V precomputed at prefill (§Perf: the baseline
+        # re-projected 1500 frames per token per layer)
+        o2 = attn.gqa_attend(q2, k2, v2, causal=False)
+        h = h + attn.attn_output(lp["cross_attn"], o2, cfg)
+        hn = rmsnorm(h, lp["ln2"].astype(cfg.dtype), cfg.norm_eps)
+        return h + mlp(lp["mlp"], hn, cfg), (ck, cv)
+
+    x, (cks, cvs) = jax.lax.scan(
+        body, x, (params["dec_blocks"], state.cache.k, state.cache.v,
+                  state.cross_k, state.cross_v))
+    x = rmsnorm(x, params["ln_f"].astype(cfg.dtype), cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(cfg.dtype))
+    return logits, EncDecState(
+        cache=attn.KVCache(k=cks, v=cvs, length=state.cache.length + 1),
+        enc=enc, cross_k=state.cross_k, cross_v=state.cross_v, pos=pos + 1)

@@ -1,0 +1,263 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED attention block.
+
+One set of attention+MLP weights (the "shared block", arXiv:2411.15242) is
+applied every ``cfg.shared_attn_period`` Mamba2 layers.  Structure:
+
+    super-block a (a = 0..n_super-1):
+        [shared attention block]   (skipped for a == 0)
+        `period` Mamba2 layers
+    trailing:  n_layers % period Mamba2 layers
+
+The super-blocks are scanned (stacked params reshaped [n_super, period, ..])
+so HLO stays O(1) in depth, and each application point's KV cache is a scan
+xs/ys slice — nothing per-*layer* is ever stacked, which keeps the 500k-
+token decode cache at [n_apps, B, S, Hkv, hd] only.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import (ModelConfig, checkpoint_wrap,
+                                 dense_init, rmsnorm, stacked)
+from repro.models.mamba2 import (
+    Mamba2State, init_mamba2, init_mamba2_state, mamba2_decode,
+    mamba2_forward,
+)
+from repro.models.mlp import init_mlp, mlp
+
+
+def hybrid_layout(cfg: ModelConfig):
+    """(n_super, period, n_trailing, n_apps)."""
+    period = cfg.shared_attn_period
+    n_super = cfg.n_layers // period
+    rem = cfg.n_layers % period
+    return n_super, period, rem, max(n_super - 1, 0)
+
+
+def _init_mamba_layer(key, cfg: ModelConfig):
+    return {"ln": jnp.ones((cfg.d_model,), cfg.param_dtype),
+            "mamba": init_mamba2(key, cfg)}
+
+
+def init_hybrid(key, cfg: ModelConfig):
+    n_super, period, rem, _ = hybrid_layout(cfg)
+    ks = jax.random.split(key, 6)
+    main = stacked(jax.random.split(ks[1], n_super * period),
+                   lambda k: _init_mamba_layer(k, cfg))
+    main = jax.tree_util.tree_map(
+        lambda x: x.reshape((n_super, period) + x.shape[1:]), main)
+    p = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab_padded, cfg.d_model))
+                  * 0.02).astype(cfg.param_dtype),
+        "main": main,
+        "shared": {
+            "ln1": jnp.ones((cfg.d_model,), cfg.param_dtype),
+            "attn": attn.init_attn(ks[2], cfg),
+            "ln2": jnp.ones((cfg.d_model,), cfg.param_dtype),
+            "mlp": init_mlp(ks[3], cfg),
+        },
+        "ln_f": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "lm_head": dense_init(ks[4], cfg.d_model, cfg.vocab_padded,
+                              cfg.param_dtype, scale=0.02),
+    }
+    if rem:
+        p["trailing"] = stacked(jax.random.split(ks[5], rem),
+                                lambda k: _init_mamba_layer(k, cfg))
+    return p
+
+
+def _shared_block(p, x, cfg: ModelConfig, positions):
+    h = rmsnorm(x, p["ln1"].astype(cfg.dtype), cfg.norm_eps)
+    q, k, v = attn.qkv_project(p["attn"], h, cfg, positions)
+    o = attn.gqa_attend(q, k, v, causal=True, q_positions=positions,
+                        kv_positions=positions)
+    x = x + attn.attn_output(p["attn"], o, cfg)
+    h = rmsnorm(x, p["ln2"].astype(cfg.dtype), cfg.norm_eps)
+    return x + mlp(p["mlp"], h, cfg), (k, v)
+
+
+def _shared_block_decode(p, x, cfg, ck, cv, pos):
+    B = x.shape[0]
+    h = rmsnorm(x, p["ln1"].astype(cfg.dtype), cfg.norm_eps)
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    q, k, v = attn.qkv_project(p["attn"], h, cfg, positions)
+    ck, cv = attn.cache_update(ck, cv, k, v, pos)
+    valid = jnp.broadcast_to(pos + 1, (B,))
+    o = attn.gqa_attend(q, ck, cv, causal=False, kv_valid_len=valid)
+    x = x + attn.attn_output(p["attn"], o, cfg)
+    h = rmsnorm(x, p["ln2"].astype(cfg.dtype), cfg.norm_eps)
+    return x + mlp(p["mlp"], h, cfg), ck, cv
+
+
+def _mamba_stack_fwd(layers, x, cfg):
+    def inner(h, lp):
+        hn = rmsnorm(h, lp["ln"].astype(cfg.dtype), cfg.norm_eps)
+        y, _ = mamba2_forward(lp["mamba"], hn, cfg)
+        return h + y, ()
+    x, _ = jax.lax.scan(inner, x, layers)
+    return x
+
+
+def hybrid_apply(params, tokens, cfg: ModelConfig):
+    """Training forward: tokens [B,S] -> (logits, aux=0)."""
+    n_super, period, rem, _ = hybrid_layout(cfg)
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    shared = params["shared"]
+    flags = jnp.arange(n_super) > 0
+
+    def super_body(h, inp):
+        layers, flag = inp
+
+        def with_attn(h):
+            out, _ = _shared_block(shared, h, cfg, positions)
+            return out
+
+        h = jax.lax.cond(flag, with_attn, lambda v: v, h)
+        return _mamba_stack_fwd(layers, h, cfg), ()
+
+    body = checkpoint_wrap(super_body, cfg)
+    x, _ = jax.lax.scan(body, x, (params["main"], flags))
+    if rem:
+        x = _mamba_stack_fwd(params["trailing"], x, cfg)
+    x = rmsnorm(x, params["ln_f"].astype(cfg.dtype), cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(cfg.dtype))
+    return logits, jnp.zeros((), jnp.float32)
+
+
+# ------------------------------------------------------------------ serving
+class HybridDecodeState(NamedTuple):
+    mamba_main: Mamba2State      # [n_super, period, B, ...]
+    mamba_trailing: Mamba2State  # [rem, B, ...] (rem may be 0)
+    attn_cache: attn.KVCache     # [n_super, B, Smax, Hkv, hd] (slot0 unused)
+    pos: jax.Array
+
+
+def hybrid_make_state(cfg: ModelConfig, batch: int,
+                      max_len: int) -> HybridDecodeState:
+    n_super, period, rem, _ = hybrid_layout(cfg)
+    m = init_mamba2_state(cfg, batch)
+
+    def tile(pref):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.zeros(pref + x.shape, x.dtype), m)
+
+    return HybridDecodeState(
+        mamba_main=tile((n_super, period)),
+        mamba_trailing=tile((max(rem, 1),)),
+        attn_cache=attn.init_cache(cfg, batch, max_len, n_layers=n_super),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def _mamba_stack_prefill(layers, states: Mamba2State, x, cfg):
+    def inner(h, inp):
+        lp, st = inp
+        hn = rmsnorm(h, lp["ln"].astype(cfg.dtype), cfg.norm_eps)
+        y, new_st = mamba2_forward(lp["mamba"], hn, cfg, init_state=st)
+        return h + y, new_st
+    x, new_states = jax.lax.scan(inner, x, (layers, states))
+    return x, new_states
+
+
+def hybrid_prefill(params, tokens, cfg: ModelConfig,
+                   state: "HybridDecodeState"):
+    """Process the prompt, filling Mamba states and shared-attn caches."""
+    n_super, period, rem, _ = hybrid_layout(cfg)
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    shared = params["shared"]
+    flags = jnp.arange(n_super) > 0
+    zero = jnp.zeros((), jnp.int32)
+
+    def super_body(h, inp):
+        layers, flag, m_st, ck, cv = inp
+
+        def with_attn(args):
+            h, ck, cv = args
+            out, (k, v) = _shared_block(shared, h, cfg, positions)
+            ck, cv = attn.cache_update(ck, cv, k, v, zero)
+            return out, ck, cv
+
+        h, ck, cv = jax.lax.cond(flag, with_attn,
+                                 lambda args: args, (h, ck, cv))
+        h, new_m = _mamba_stack_prefill(layers, m_st, h, cfg)
+        return h, (new_m, ck, cv)
+
+    body = checkpoint_wrap(super_body, cfg)
+    x, (new_main, cks, cvs) = jax.lax.scan(
+        body, x, (params["main"], flags, state.mamba_main,
+                  state.attn_cache.k, state.attn_cache.v))
+    new_trailing = state.mamba_trailing
+    if rem:
+        x, new_trailing = _mamba_stack_prefill(
+            params["trailing"], state.mamba_trailing, x, cfg)
+    x = rmsnorm(x[:, -1:, :], params["ln_f"].astype(cfg.dtype), cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(cfg.dtype))
+    return logits, HybridDecodeState(
+        mamba_main=new_main,
+        mamba_trailing=new_trailing,
+        attn_cache=attn.KVCache(k=cks, v=cvs,
+                                length=jnp.full_like(
+                                    state.attn_cache.length, S)),
+        pos=jnp.array(S, jnp.int32))
+
+
+def _mamba_stack_decode(layers, states: Mamba2State, x, cfg):
+    def inner(h, inp):
+        lp, st = inp
+        hn = rmsnorm(h, lp["ln"].astype(cfg.dtype), cfg.norm_eps)
+        y, new_st = mamba2_decode(lp["mamba"], hn, st, cfg)
+        return h + y, new_st
+    x, new_states = jax.lax.scan(inner, x, (layers, states))
+    return x, new_states
+
+
+def hybrid_decode_step(params, token, cfg: ModelConfig,
+                       state: HybridDecodeState):
+    """token [B,1] -> (logits, new state).  O(1) in context for the Mamba
+    backbone; shared-attention caches are [n_apps] slices only."""
+    n_super, period, rem, _ = hybrid_layout(cfg)
+    x = params["embed"].astype(cfg.dtype)[token]
+    shared = params["shared"]
+    pos = state.pos
+    flags = jnp.arange(n_super) > 0
+
+    def super_body(h, inp):
+        layers, flag, mamba_st, ck, cv = inp
+
+        def with_attn(args):
+            h, ck, cv = args
+            return _shared_block_decode(shared, h, cfg, ck, cv, pos)
+
+        h, ck, cv = jax.lax.cond(flag, with_attn,
+                                 lambda args: args, (h, ck, cv))
+        h, new_m = _mamba_stack_decode(layers, mamba_st, h, cfg)
+        return h, (new_m, ck, cv)
+
+    x, (new_main, cks, cvs) = jax.lax.scan(
+        super_body, x,
+        (params["main"], flags, state.mamba_main,
+         state.attn_cache.k, state.attn_cache.v))
+    new_trailing = state.mamba_trailing
+    if rem:
+        x, new_trailing = _mamba_stack_decode(params["trailing"],
+                                              state.mamba_trailing, x, cfg)
+    x = rmsnorm(x, params["ln_f"].astype(cfg.dtype), cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(cfg.dtype))
+    return logits, HybridDecodeState(
+        mamba_main=new_main,
+        mamba_trailing=new_trailing,
+        attn_cache=attn.KVCache(k=cks, v=cvs,
+                                length=state.attn_cache.length + 1),
+        pos=pos + 1)

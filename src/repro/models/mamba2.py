@@ -1,0 +1,260 @@
+"""Mamba2 block — State Space Duality (SSD), arXiv:2405.21060.
+
+Chunked SSD algorithm (the quadratic-within-chunk / linear-across-chunk
+decomposition).  This pure-jnp implementation is the oracle for the Pallas
+``ssd_scan`` kernel and the production path on CPU; state-passing prefill
+and O(1) decode make the 500k-token long-context shapes tractable (DESIGN.md
+§4: SSM/hybrid archs run `long_500k`, full-attention archs skip it).
+
+Projections are SPLIT (w_z, w_x, w_b, w_c, w_dt + per-part depthwise conv)
+rather than fused like the reference CUDA code: each output dim then has a
+single semantic role, so tensor-parallel sharding of d_inner never slices
+across concatenated segments (sharding/partition.py relies on this).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, rmsnorm
+
+
+# ----------------------------------------------------------------- SSD core
+def ssd_chunked(x, dt, a_log, b_mat, c_mat, chunk: int,
+                init_state: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x:      [B,S,H,P]   (dt folded here)
+    dt:     [B,S,H]     (positive, post-softplus)
+    a_log:  [H]         A = -exp(a_log)
+    b_mat:  [B,S,H,N]   (groups already broadcast to heads)
+    c_mat:  [B,S,H,N]
+    init_state: [B,H,N,P] or None
+    Returns (y [B,S,H,P], final_state [B,H,N,P]).
+    """
+    B, S, H, P = x.shape
+    N = b_mat.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:          # arbitrary prompt lengths: largest divisor <= chunk
+        Q -= 1
+    Nc = S // Q
+    f32 = jnp.float32
+
+    A = -jnp.exp(a_log.astype(f32))                          # [H] (negative)
+    xb = x.reshape(B, Nc, Q, H, P).astype(f32)
+    dtb = dt.reshape(B, Nc, Q, H).astype(f32)
+    Bb = b_mat.reshape(B, Nc, Q, H, N).astype(f32)
+    Cb = c_mat.reshape(B, Nc, Q, H, N).astype(f32)
+
+    xdt = xb * dtb[..., None]                                # dt * x
+    dA = dtb * A                                             # [B,Nc,Q,H] <0
+    dA_cum = jnp.cumsum(dA, axis=2)
+
+    # --- within-chunk (quadratic, attention-like) ----------------------
+    diff = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]  # [B,Nc,i,j,H]
+    ii = jnp.arange(Q)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(diff), 0.0)
+    CB = jnp.einsum("bcihn,bcjhn->bcijh", Cb, Bb)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", CB * L, xdt)
+
+    # --- chunk-final states --------------------------------------------
+    decay_last = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)      # [B,Nc,Q,H]
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp",
+                        decay_last, Bb, xdt)                  # [B,Nc,H,N,P]
+
+    # --- inter-chunk recurrence (linear scan) ---------------------------
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                # [B,Nc,H]
+    s0 = (init_state.astype(f32) if init_state is not None
+          else jnp.zeros((B, H, N, P), f32))
+
+    def step(s, inp):
+        cd, st = inp                                          # [B,H], [B,H,N,P]
+        entering = s
+        s_new = cd[..., None, None] * s + st
+        return s_new, entering
+
+    final, entering = jax.lax.scan(
+        step, s0, (jnp.moveaxis(chunk_decay, 1, 0),
+                   jnp.moveaxis(states, 1, 0)))
+    entering = jnp.moveaxis(entering, 0, 1)                   # [B,Nc,H,N,P]
+
+    # --- off-diagonal (state) contribution ------------------------------
+    y_off = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp",
+                       Cb, entering, jnp.exp(dA_cum))
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state, x_t, dt_t, a_log, b_t, c_t):
+    """One-token SSD update.  state [B,H,N,P]; x_t [B,H,P]; dt_t [B,H];
+    b_t/c_t [B,H,N].  Returns (y_t [B,H,P], new_state)."""
+    f32 = jnp.float32
+    A = -jnp.exp(a_log.astype(f32))
+    dA = jnp.exp(dt_t.astype(f32) * A)                        # [B,H]
+    upd = jnp.einsum("bhn,bhp->bhnp", b_t.astype(f32),
+                     (x_t * dt_t[..., None]).astype(f32))
+    new_state = dA[..., None, None] * state + upd
+    y = jnp.einsum("bhn,bhnp->bhp", c_t.astype(f32), new_state)
+    return y.astype(x_t.dtype), new_state
+
+
+# ------------------------------------------------------------- Mamba2 block
+class Mamba2State(NamedTuple):
+    ssm: jax.Array     # [B,H,N,P] fp32
+    conv_x: jax.Array  # [B, conv-1, d_inner]
+    conv_b: jax.Array  # [B, conv-1, G*N]
+    conv_c: jax.Array  # [B, conv-1, G*N]
+
+
+def _dims(cfg: ModelConfig, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    H = d_inner // cfg.ssm_head_dim
+    G = 1
+    N = cfg.ssm_state
+    return d, d_inner, H, G, N
+
+
+def init_mamba2(key, cfg: ModelConfig, d_model: int | None = None):
+    d, d_inner, H, G, N = _dims(cfg, d_model)
+    ks = jax.random.split(key, 6)
+    K = cfg.ssm_conv
+
+    def conv_init(k, ch):
+        return (jax.random.normal(k, (K, ch)) / math.sqrt(K)
+                ).astype(cfg.param_dtype)
+
+    kc = jax.random.split(ks[3], 3)
+    return {
+        "w_z": dense_init(ks[0], d, d_inner, cfg.param_dtype),
+        "w_x": dense_init(ks[1], d, d_inner, cfg.param_dtype),
+        "w_b": dense_init(ks[2], d, G * N, cfg.param_dtype),
+        "w_c": dense_init(ks[4], d, G * N, cfg.param_dtype),
+        "w_dt": dense_init(ks[5], d, H, cfg.param_dtype),
+        "conv_x_w": conv_init(kc[0], d_inner),
+        "conv_b_w": conv_init(kc[1], G * N),
+        "conv_c_w": conv_init(kc[2], G * N),
+        "conv_x_b": jnp.zeros((d_inner,), cfg.param_dtype),
+        "conv_bb": jnp.zeros((G * N,), cfg.param_dtype),
+        "conv_cb": jnp.zeros((G * N,), cfg.param_dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(cfg.param_dtype),
+        "d_skip": jnp.ones((H,), cfg.param_dtype),
+        "dt_bias": jnp.full((H,), math.log(math.e - 1.0), cfg.param_dtype),
+        "norm_g": jnp.ones((d_inner,), cfg.param_dtype),
+        "out_proj": dense_init(ks[3], d_inner, d, cfg.param_dtype),
+    }
+
+
+def _causal_conv(x, prev, w, b, dtype):
+    """Depthwise causal conv along seq.  x: [B,S,C]; prev: [B,K-1,C];
+    w: [K,C]; returns (y [B,S,C], new_prev [B,K-1,C])."""
+    K = w.shape[0]
+    S = x.shape[1]
+    xpad = jnp.concatenate([prev.astype(dtype), x], axis=1)
+    new_prev = xpad[:, -(K - 1):, :] if K > 1 else xpad[:, :0, :]
+    wins = jnp.stack([xpad[:, i:i + S, :] for i in range(K)], axis=2)
+    y = jnp.einsum("bskc,kc->bsc", wins, w.astype(dtype)) + b.astype(dtype)
+    return jax.nn.silu(y), new_prev
+
+
+def mamba2_forward(p, x, cfg: ModelConfig,
+                   init_state: Mamba2State | None = None,
+                   d_model: int | None = None):
+    """Full-sequence forward. x: [B,S,D].  Returns (y, final Mamba2State)."""
+    d, d_inner, H, G, N = _dims(cfg, d_model)
+    B, S, _ = x.shape
+    dt_ = cfg.dtype
+    K = cfg.ssm_conv
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"].astype(dt_))
+    xs = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(dt_))
+    bm = jnp.einsum("bsd,de->bse", x, p["w_b"].astype(dt_))
+    cm = jnp.einsum("bsd,de->bse", x, p["w_c"].astype(dt_))
+    dt_raw = jnp.einsum("bsd,de->bse", x, p["w_dt"].astype(dt_))
+
+    if init_state is None:
+        zpad = lambda ch: jnp.zeros((B, K - 1, ch), dt_)
+        prev_x, prev_b, prev_c = zpad(d_inner), zpad(G * N), zpad(G * N)
+    else:
+        prev_x, prev_b, prev_c = (init_state.conv_x, init_state.conv_b,
+                                  init_state.conv_c)
+    xs, new_px = _causal_conv(xs, prev_x, p["conv_x_w"], p["conv_x_b"], dt_)
+    bm, new_pb = _causal_conv(bm, prev_b, p["conv_b_w"], p["conv_bb"], dt_)
+    cm, new_pc = _causal_conv(cm, prev_c, p["conv_c_w"], p["conv_cb"], dt_)
+
+    xh = xs.reshape(B, S, H, cfg.ssm_head_dim)
+    rep = H // G
+    b_h = jnp.repeat(bm.reshape(B, S, G, N), rep, axis=2)
+    c_h = jnp.repeat(cm.reshape(B, S, G, N), rep, axis=2)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+
+    y, ssm_final = ssd_chunked(
+        xh, dt, p["a_log"], b_h, c_h, cfg.ssm_chunk,
+        init_state.ssm if init_state is not None else None)
+    y = y + xh * p["d_skip"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_g"].astype(dt_), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_))
+    return out, Mamba2State(ssm=ssm_final, conv_x=new_px, conv_b=new_pb,
+                            conv_c=new_pc)
+
+
+def _conv_step(win, w, b, dtype):
+    """win: [B,K,C] (already includes the new sample at the end)."""
+    y = jnp.einsum("bkc,kc->bc", win, w.astype(dtype)) + b.astype(dtype)
+    return jax.nn.silu(y)
+
+
+def mamba2_decode(p, x_t, state: Mamba2State, cfg: ModelConfig,
+                  d_model: int | None = None):
+    """One-token decode. x_t: [B,1,D]."""
+    d, d_inner, H, G, N = _dims(cfg, d_model)
+    B = x_t.shape[0]
+    dt_ = cfg.dtype
+    z = jnp.einsum("bsd,de->bse", x_t, p["w_z"].astype(dt_))
+    xs = jnp.einsum("bsd,de->bse", x_t, p["w_x"].astype(dt_))[:, 0]
+    bm = jnp.einsum("bsd,de->bse", x_t, p["w_b"].astype(dt_))[:, 0]
+    cm = jnp.einsum("bsd,de->bse", x_t, p["w_c"].astype(dt_))[:, 0]
+    dt_raw = jnp.einsum("bsd,de->bse", x_t, p["w_dt"].astype(dt_))[:, 0]
+
+    def upd(prev, new):
+        win = jnp.concatenate([prev.astype(dt_), new[:, None, :]], axis=1)
+        return win, win[:, 1:, :]
+
+    win_x, new_px = upd(state.conv_x, xs)
+    win_b, new_pb = upd(state.conv_b, bm)
+    win_c, new_pc = upd(state.conv_c, cm)
+    xs = _conv_step(win_x, p["conv_x_w"], p["conv_x_b"], dt_)
+    bm = _conv_step(win_b, p["conv_b_w"], p["conv_bb"], dt_)
+    cm = _conv_step(win_c, p["conv_c_w"], p["conv_cb"], dt_)
+
+    xh = xs.reshape(B, H, cfg.ssm_head_dim)
+    rep = H // G
+    b_h = jnp.repeat(bm.reshape(B, G, N), rep, axis=1)
+    c_h = jnp.repeat(cm.reshape(B, G, N), rep, axis=1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    y, ssm_new = ssd_decode_step(state.ssm, xh, dt, p["a_log"], b_h, c_h)
+    y = y + xh * p["d_skip"].astype(dt_)[None, :, None]
+    y = y.reshape(B, 1, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_g"].astype(dt_), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_))
+    return out, Mamba2State(ssm=ssm_new, conv_x=new_px, conv_b=new_pb,
+                            conv_c=new_pc)
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int,
+                      d_model: int | None = None) -> Mamba2State:
+    d, d_inner, H, G, N = _dims(cfg, d_model)
+    K = cfg.ssm_conv
+    return Mamba2State(
+        ssm=jnp.zeros((batch, H, N, cfg.ssm_head_dim), jnp.float32),
+        conv_x=jnp.zeros((batch, K - 1, d_inner), cfg.dtype),
+        conv_b=jnp.zeros((batch, K - 1, G * N), cfg.dtype),
+        conv_c=jnp.zeros((batch, K - 1, G * N), cfg.dtype),
+    )

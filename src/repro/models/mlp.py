@@ -1,0 +1,33 @@
+"""Dense feed-forward blocks: SwiGLU / GeGLU / plain two-layer MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, activation, dense_init
+
+
+def init_mlp(key, cfg: ModelConfig, d_model: int | None = None,
+             d_ff: int | None = None):
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(ks[0], d, f, cfg.param_dtype),
+        "w_out": dense_init(ks[1], f, d, cfg.param_dtype),
+    }
+    if cfg.glu:
+        p["w_gate"] = dense_init(ks[2], d, f, cfg.param_dtype)
+    return p
+
+
+def mlp(p, x, cfg: ModelConfig):
+    dt = cfg.dtype
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(dt))
+    if cfg.glu:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        h = activation(g, cfg.act) * h
+    else:
+        h = activation(h, cfg.act)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"].astype(dt))

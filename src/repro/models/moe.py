@@ -1,0 +1,119 @@
+"""Mixture-of-Experts layer (GShard-style dense dispatch + shared experts).
+
+Two dispatch implementations:
+
+  * ``einsum`` (default, used by the baseline dry-run): capacity-bounded
+    one-hot dispatch/combine einsums.  Numerically standard and GSPMD-
+    shardable out of the box, but the dispatch einsums add O(T*E*C*D) HLO
+    FLOPs — the §Perf hillclimb for the MoE cells replaces it with the
+    shard_map expert-parallel path below.
+
+  * ``shard_map`` EP path (repro/collectives/moe_ep.py): local top-k,
+    all-to-all token exchange (DIRECT or HIERARCHICAL schedule — this is
+    where the paper's application-aware routing arbitration plugs in),
+    dense per-expert matmuls, all-to-all back.
+
+Router: softmax gating, top-k, load-balancing auxiliary loss (Switch/GShard
+style), optional always-on shared experts (qwen2-moe).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, activation, dense_init
+from repro.models.mlp import init_mlp, mlp
+
+MOE_GROUP = 512  # tokens per dispatch group (capacity is per group)
+
+
+def init_moe(key, cfg: ModelConfig):
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        "w_in": (jax.random.normal(ks[1], (E, d, f)) * scale
+                 ).astype(cfg.param_dtype),
+        "w_gate": (jax.random.normal(ks[2], (E, d, f)) * scale
+                   ).astype(cfg.param_dtype),
+        "w_out": (jax.random.normal(ks[3], (E, f, d)) / math.sqrt(f)
+                  ).astype(cfg.param_dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(
+            ks[4], cfg, d_ff=(cfg.d_ff_expert or cfg.d_ff)
+            * cfg.n_shared_experts)
+    return p
+
+
+def router_probs(p, x, cfg: ModelConfig):
+    """fp32 router. x: [T,D] -> probs [T,E]."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), p["router"])
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def topk_dispatch(probs, cfg: ModelConfig, capacity: int):
+    """Capacity-bounded top-k assignment.
+
+    probs: [G, S, E] (grouped tokens). Returns:
+      dispatch [G,S,E,C] in {0,1}, combine [G,S,E,C] (gate-weighted),
+      aux loss scalar.
+    """
+    G, S, E = probs.shape
+    k = cfg.top_k
+    topv, topi = jax.lax.top_k(probs, k)              # [G,S,k]
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert's capacity buffer
+    counts = jnp.zeros((G, E), jnp.int32)
+    disp = jnp.zeros((G, S, E, capacity), jnp.float32)
+    comb = jnp.zeros((G, S, E, capacity), jnp.float32)
+    for j in range(k):                                 # k is small (<=8)
+        oh = jax.nn.one_hot(topi[..., j], E, dtype=jnp.int32)   # [G,S,E]
+        pos = jnp.cumsum(oh, axis=1) - oh + counts[:, None, :]  # [G,S,E]
+        keep = (pos < capacity) & (oh > 0)
+        pos_c = jax.nn.one_hot(jnp.where(keep, pos, capacity),
+                               capacity, dtype=jnp.float32)     # [G,S,E,C]
+        sel = keep.astype(jnp.float32)[..., None] * pos_c
+        disp = disp + sel
+        comb = comb + sel * topv[..., j][..., None, None]
+        counts = counts + oh.sum(axis=1)
+
+    # load-balance auxiliary loss (Switch): E * mean_e(frac_e * prob_e)
+    me = probs.mean(axis=(0, 1))                       # [E]
+    top1 = jax.nn.one_hot(topi[..., 0], E).mean(axis=(0, 1))
+    aux = E * jnp.sum(me * top1)
+    return disp, comb, aux
+
+
+def moe_einsum(p, x, cfg: ModelConfig):
+    """x: [B,S,D] -> (y, aux_loss). GShard-style grouped dense dispatch."""
+    B, S, D = x.shape
+    dt = cfg.dtype
+    T = B * S
+    xg = x.reshape(T, D)
+    g = max(1, T // MOE_GROUP)
+    while T % g:
+        g -= 1
+    Sg = T // g
+    probs = router_probs(p, xg, cfg).reshape(g, Sg, cfg.n_experts)
+    capacity = max(cfg.top_k, int(math.ceil(
+        Sg * cfg.top_k * 1.25 / cfg.n_experts)))
+    disp, comb, aux = topk_dispatch(probs, cfg, capacity)
+    xt = xg.reshape(g, Sg, D)
+    # dispatch: [g,s,e,c] x [g,s,d] -> [e,g,c,d]
+    xe = jnp.einsum("gsec,gsd->egcd", disp.astype(dt), xt)
+    h = jnp.einsum("egcd,edf->egcf", xe, p["w_in"].astype(dt))
+    gate = jnp.einsum("egcd,edf->egcf", xe, p["w_gate"].astype(dt))
+    h = activation(gate, cfg.act) * h
+    ye = jnp.einsum("egcf,efd->egcd", h, p["w_out"].astype(dt))
+    y = jnp.einsum("gsec,egcd->gsd", comb.astype(dt), ye)
+    y = y.reshape(B, S, D)
+    if cfg.n_shared_experts:
+        y = y + mlp(p["shared"], x, cfg)
+    return y, aux.astype(jnp.float32)

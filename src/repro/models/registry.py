@@ -1,0 +1,101 @@
+"""Family dispatch: one uniform API over all architecture families.
+
+    init_params(cfg, seed)                         -> params
+    train_forward(params, batch, cfg)              -> (logits, aux_loss)
+    make_decode_state(cfg, batch, max_len)         -> state
+    prefill(params, batch, cfg, state)             -> (logits, state)
+    decode_step(params, token, cfg, state)         -> (logits, state)
+
+`batch` is a dict: tokens [B,S] always; + frames [B,F,D] (encdec stub),
+patches [B,P,D] (vlm stub).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as _encdec
+from repro.models import hybrid as _hybrid
+from repro.models import ssm_lm as _ssm
+from repro.models import transformer as _tf
+from repro.models import vlm as _vlm
+from repro.models.common import Family, ModelConfig
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    if cfg.family in (Family.DENSE, Family.MOE):
+        return _tf.init_lm(key, cfg)
+    if cfg.family == Family.VLM:
+        return _vlm.init_vlm(key, cfg)
+    if cfg.family == Family.SSM:
+        return _ssm.init_ssm_lm(key, cfg)
+    if cfg.family == Family.HYBRID:
+        return _hybrid.init_hybrid(key, cfg)
+    if cfg.family == Family.ENCDEC:
+        return _encdec.init_encdec(key, cfg)
+    raise ValueError(cfg.family)
+
+
+def train_forward(params, batch: dict, cfg: ModelConfig):
+    """-> (logits [B,S,V] over the *token* part, aux_loss)."""
+    tokens = batch["tokens"]
+    if cfg.family in (Family.DENSE, Family.MOE):
+        return _tf.lm_apply(params, tokens, cfg)
+    if cfg.family == Family.VLM:
+        logits, aux = _vlm.vlm_apply(params, batch["patches"], tokens, cfg)
+        return logits[:, cfg.img_tokens:, :], aux   # loss on text positions
+    if cfg.family == Family.SSM:
+        return _ssm.ssm_lm_apply(params, tokens, cfg)
+    if cfg.family == Family.HYBRID:
+        return _hybrid.hybrid_apply(params, tokens, cfg)
+    if cfg.family == Family.ENCDEC:
+        return _encdec.encdec_apply(params, batch["frames"], tokens, cfg)
+    raise ValueError(cfg.family)
+
+
+def make_decode_state(cfg: ModelConfig, batch: int, max_len: int, *,
+                      enc=None):
+    if cfg.family in (Family.DENSE, Family.MOE):
+        return _tf.lm_make_state(cfg, batch, max_len)
+    if cfg.family == Family.VLM:
+        return _vlm.vlm_make_state(cfg, batch, max_len)
+    if cfg.family == Family.SSM:
+        return _ssm.ssm_make_state(cfg, batch, max_len)
+    if cfg.family == Family.HYBRID:
+        return _hybrid.hybrid_make_state(cfg, batch, max_len)
+    if cfg.family == Family.ENCDEC:
+        return _encdec.encdec_make_state(cfg, batch, max_len, enc=enc)
+    raise ValueError(cfg.family)
+
+
+def prefill(params, batch: dict, cfg: ModelConfig, state):
+    tokens = batch["tokens"]
+    if cfg.family in (Family.DENSE, Family.MOE):
+        return _tf.lm_prefill(params, tokens, cfg, state)
+    if cfg.family == Family.VLM:
+        return _vlm.vlm_prefill(params, batch["patches"], tokens, cfg, state)
+    if cfg.family == Family.SSM:
+        return _ssm.ssm_prefill(params, tokens, cfg, state)
+    if cfg.family == Family.HYBRID:
+        return _hybrid.hybrid_prefill(params, tokens, cfg, state)
+    if cfg.family == Family.ENCDEC:
+        enc = _encdec.encode(params, batch["frames"], cfg)
+        state = state._replace(enc=enc)
+        return _encdec.encdec_prefill(params, tokens, cfg, state)
+    raise ValueError(cfg.family)
+
+
+def decode_step(params, token, cfg: ModelConfig, state):
+    if cfg.family in (Family.DENSE, Family.MOE):
+        return _tf.lm_decode_step(params, token, cfg, state)
+    if cfg.family == Family.VLM:
+        return _vlm.vlm_decode_step(params, token, cfg, state)
+    if cfg.family == Family.SSM:
+        return _ssm.ssm_decode_step(params, token, cfg, state)
+    if cfg.family == Family.HYBRID:
+        return _hybrid.hybrid_decode_step(params, token, cfg, state)
+    if cfg.family == Family.ENCDEC:
+        return _encdec.encdec_decode_step(params, token, cfg, state)
+    raise ValueError(cfg.family)

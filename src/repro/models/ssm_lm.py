@@ -1,0 +1,91 @@
+"""Pure-SSM language model (mamba2-130m): embed + scanned Mamba2 blocks."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ModelConfig, checkpoint_wrap,
+                                 dense_init, rmsnorm, stacked)
+from repro.models.mamba2 import (
+    Mamba2State, init_mamba2, init_mamba2_state, mamba2_decode,
+    mamba2_forward,
+)
+
+
+def init_ssm_lm(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab_padded, cfg.d_model))
+                  * 0.02).astype(cfg.param_dtype),
+        "blocks": stacked(jax.random.split(ks[1], cfg.n_layers),
+                          lambda k: {"ln": jnp.ones((cfg.d_model,),
+                                                    cfg.param_dtype),
+                                     "mamba": init_mamba2(k, cfg)}),
+        "ln_f": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+
+
+def _logits(params, x, cfg):
+    x = rmsnorm(x, params["ln_f"].astype(cfg.dtype), cfg.norm_eps)
+    return jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(cfg.dtype))
+
+
+def ssm_lm_apply(params, tokens, cfg: ModelConfig):
+    x = params["embed"].astype(cfg.dtype)[tokens]
+
+    def body(h, lp):
+        hn = rmsnorm(h, lp["ln"].astype(cfg.dtype), cfg.norm_eps)
+        y, _ = mamba2_forward(lp["mamba"], hn, cfg)
+        return h + y, ()
+
+    body_fn = checkpoint_wrap(body, cfg)
+    x, _ = jax.lax.scan(body_fn, x, params["blocks"])
+    return _logits(params, x, cfg), jnp.zeros((), jnp.float32)
+
+
+class SSMDecodeState(NamedTuple):
+    states: Mamba2State    # stacked [L, ...]
+    pos: jax.Array
+
+
+def ssm_make_state(cfg: ModelConfig, batch: int,
+                   max_len: int = 0) -> SSMDecodeState:
+    m = init_mamba2_state(cfg, batch)
+    L = cfg.n_layers
+    tiled = jax.tree_util.tree_map(
+        lambda x: jnp.zeros((L,) + x.shape, x.dtype), m)
+    return SSMDecodeState(states=tiled, pos=jnp.zeros((), jnp.int32))
+
+
+def ssm_prefill(params, tokens, cfg: ModelConfig, state: SSMDecodeState):
+    x = params["embed"].astype(cfg.dtype)[tokens]
+
+    def body(h, inp):
+        lp, st = inp
+        hn = rmsnorm(h, lp["ln"].astype(cfg.dtype), cfg.norm_eps)
+        y, new_st = mamba2_forward(lp["mamba"], hn, cfg, init_state=st)
+        return h + y, new_st
+
+    body_fn = checkpoint_wrap(body, cfg)
+    x, new_states = jax.lax.scan(body_fn, x,
+                                 (params["blocks"], state.states))
+    logits = _logits(params, x[:, -1:, :], cfg)
+    return logits, SSMDecodeState(states=new_states,
+                                  pos=state.pos + tokens.shape[1])
+
+
+def ssm_decode_step(params, token, cfg: ModelConfig, state: SSMDecodeState):
+    x = params["embed"].astype(cfg.dtype)[token]
+
+    def body(h, inp):
+        lp, st = inp
+        hn = rmsnorm(h, lp["ln"].astype(cfg.dtype), cfg.norm_eps)
+        y, new_st = mamba2_decode(lp["mamba"], hn, st, cfg)
+        return h + y, new_st
+
+    x, new_states = jax.lax.scan(body, x, (params["blocks"], state.states))
+    return _logits(params, x, cfg), SSMDecodeState(states=new_states,
+                                                   pos=state.pos + 1)

@@ -1,0 +1,202 @@
+"""Decoder-only transformer LM (dense and MoE variants).
+
+Blocks are stacked along a leading layer axis and executed with
+``jax.lax.scan`` (+ optional remat) so the compiled HLO is O(1) in depth.
+Used directly by the dense/moe archs and as the backbone for the VLM
+(prefix-LM mask) — the whisper enc-dec and the zamba2 hybrid compose these
+same primitives in their own modules.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import (Family, ModelConfig, checkpoint_wrap,
+                                 dense_init, rmsnorm, stacked)
+from repro.models.mlp import init_mlp, mlp
+from repro.models.moe import init_moe, moe_einsum
+
+
+# ------------------------------------------------------------------- blocks
+def init_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "attn": attn.init_attn(ks[0], cfg),
+        "ln2": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+    if cfg.family in (Family.MOE,):
+        p["moe"] = init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg)
+    return p
+
+
+def block_forward(p, x, cfg: ModelConfig, positions, *,
+                  prefix_len: Optional[int] = None):
+    """Training/prefill block: full-sequence causal (or prefix-LM) attn."""
+    h = rmsnorm(x, p["ln1"].astype(cfg.dtype), cfg.norm_eps)
+    q, k, v = attn.qkv_project(p["attn"], h, cfg, positions)
+    # prefix_len: prefix-LM (paligemma) — the image prefix attends
+    # bidirectionally, the text suffix causally
+    o = attn.gqa_attend(q, k, v, causal=True, q_positions=positions,
+                        kv_positions=positions, prefix_len=prefix_len)
+    x = x + attn.attn_output(p["attn"], o, cfg)
+    h = rmsnorm(x, p["ln2"].astype(cfg.dtype), cfg.norm_eps)
+    if "moe" in p:
+        if cfg.moe_impl == "ep":
+            from repro.collectives.moe_ep import moe_ep
+            from repro.collectives.modes import CollectiveMode
+            mode = (CollectiveMode.HIERARCHICAL
+                    if cfg.moe_a2a_mode == "hierarchical"
+                    else CollectiveMode.DIRECT)
+            y, aux = moe_ep(p["moe"], h, cfg, mode=mode)
+        else:
+            y, aux = moe_einsum(p["moe"], h, cfg)
+    else:
+        y, aux = mlp(p["mlp"], h, cfg), jnp.zeros((), jnp.float32)
+    return x + y, (k, v, aux)
+
+
+def block_decode(p, x, cfg: ModelConfig, cache_k, cache_v, pos):
+    """One-token decode against a filled KV cache.
+
+    x: [B,1,D]; cache_k/v: [B,Smax,Hkv,hd]; pos: [] int32 current position.
+    """
+    B = x.shape[0]
+    h = rmsnorm(x, p["ln1"].astype(cfg.dtype), cfg.norm_eps)
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    q, k, v = attn.qkv_project(p["attn"], h, cfg, positions)
+    ck, cv = attn.cache_update(cache_k, cache_v, k, v, pos)
+    valid = jnp.broadcast_to(pos + 1, (B,))
+    o = attn.gqa_attend(q, ck, cv, causal=False, kv_valid_len=valid)
+    x = x + attn.attn_output(p["attn"], o, cfg)
+    h = rmsnorm(x, p["ln2"].astype(cfg.dtype), cfg.norm_eps)
+    if "moe" in p:
+        y, _ = moe_einsum(p["moe"], h, cfg)
+    else:
+        y = mlp(p["mlp"], h, cfg)
+    return x + y, ck, cv
+
+
+# ----------------------------------------------------------------------- LM
+def init_lm(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    params = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab_padded, cfg.d_model))
+                  * 0.02).astype(cfg.param_dtype),
+        "blocks": stacked(jax.random.split(ks[1], cfg.n_layers),
+                          partial(init_block, cfg=cfg)),
+        "ln_f": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.vocab_padded,
+                                       cfg.param_dtype, scale=0.02)
+    return params
+
+
+def _scan_blocks(params, x, cfg: ModelConfig, positions, prefix_len=None):
+    def body(carry, layer_params):
+        h, aux = carry
+        h, (_, _, a) = block_forward(layer_params, h, cfg, positions,
+                                     prefix_len=prefix_len)
+        return (h, aux + a), ()
+
+    body_fn = checkpoint_wrap(body, cfg)
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    return x, aux
+
+
+def lm_apply(params, tokens, cfg: ModelConfig, *, extra_embeds=None,
+             prefix_len=None):
+    """tokens: [B,S] -> (logits [B,S,V] (cfg.dtype), aux_loss).
+
+    extra_embeds: optional [B,P,D] prefix (VLM image / audio stub) that is
+    prepended to the token embeddings.
+    """
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(cfg.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x, aux = _scan_blocks(params, x, cfg, positions, prefix_len=prefix_len)
+    x = rmsnorm(x, params["ln_f"].astype(cfg.dtype), cfg.norm_eps)
+    head = (params["embed"] if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.dtype)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, head)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits, aux
+
+
+# ------------------------------------------------------------------ serving
+class LMDecodeState(NamedTuple):
+    cache: attn.KVCache  # stacked [L, ...]
+    pos: jax.Array       # [] int32
+
+
+def lm_make_state(cfg: ModelConfig, batch: int, max_len: int) -> LMDecodeState:
+    return LMDecodeState(cache=attn.init_cache(cfg, batch, max_len),
+                         pos=jnp.zeros((), jnp.int32))
+
+
+def lm_prefill(params, tokens, cfg: ModelConfig, state: LMDecodeState,
+               *, extra_embeds=None, prefix_len=None):
+    """Fill the cache with the prompt; returns (last-token logits, state)."""
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(cfg.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(carry, inp):
+        h = carry
+        layer_params, ck, cv = inp
+        h, (k, v, _) = block_forward(layer_params, h, cfg, positions,
+                                     prefix_len=prefix_len)
+        ck, cv = attn.cache_update(ck, cv, k, v, jnp.zeros((), jnp.int32))
+        return h, (ck, cv)
+
+    body_fn = checkpoint_wrap(body, cfg)
+    x, (ck, cv) = jax.lax.scan(
+        body_fn, x, (params["blocks"], state.cache.k, state.cache.v))
+    x = rmsnorm(x, params["ln_f"].astype(cfg.dtype), cfg.norm_eps)
+    head = (params["embed"] if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.dtype)
+    last = x[:, -1:, :]
+    logits = (jnp.einsum("bsd,vd->bsv", last, head) if cfg.tie_embeddings
+              else jnp.einsum("bsd,dv->bsv", last, head))
+    new_state = LMDecodeState(
+        cache=attn.KVCache(k=ck, v=cv,
+                           length=jnp.full((B,), S, jnp.int32)),
+        pos=jnp.array(S, jnp.int32))
+    return logits, new_state
+
+
+def lm_decode_step(params, token, cfg: ModelConfig, state: LMDecodeState):
+    """token: [B,1] int32 -> (logits [B,1,V], new state)."""
+    x = params["embed"].astype(cfg.dtype)[token]
+
+    def body(h, inp):
+        layer_params, ck, cv = inp
+        h, ck, cv = block_decode(layer_params, h, cfg, ck, cv, state.pos)
+        return h, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(
+        body, x, (params["blocks"], state.cache.k, state.cache.v))
+    x = rmsnorm(x, params["ln_f"].astype(cfg.dtype), cfg.norm_eps)
+    head = (params["embed"] if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.dtype)
+    logits = (jnp.einsum("bsd,vd->bsv", x, head) if cfg.tie_embeddings
+              else jnp.einsum("bsd,dv->bsv", x, head))
+    new_state = LMDecodeState(
+        cache=attn.KVCache(k=ck, v=cv, length=state.cache.length + 1),
+        pos=state.pos + 1)
+    return logits, new_state

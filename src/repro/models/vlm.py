@@ -1,0 +1,35 @@
+"""VLM backbone (paligemma-3b shape): gemma-style decoder over
+[image-patch embeddings ; text tokens] with a prefix-LM mask.
+
+The SigLIP vision tower is a STUB per the assignment: the model consumes
+precomputed patch embeddings [B, img_tokens, D] (what the projector would
+emit) via `extra_embeds`.  Everything else reuses the dense transformer.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.transformer import (
+    LMDecodeState, init_lm, lm_apply, lm_decode_step, lm_make_state,
+    lm_prefill,
+)
+
+init_vlm = init_lm
+
+
+def vlm_apply(params, patches, tokens, cfg: ModelConfig):
+    """patches: [B, img_tokens, D] stub embeddings; tokens: [B, S_text]."""
+    return lm_apply(params, tokens, cfg, extra_embeds=patches,
+                    prefix_len=cfg.img_tokens)
+
+
+def vlm_prefill(params, patches, tokens, cfg: ModelConfig,
+                state: LMDecodeState):
+    return lm_prefill(params, tokens, cfg, state, extra_embeds=patches,
+                      prefix_len=cfg.img_tokens)
+
+
+vlm_make_state = lm_make_state
+vlm_decode_step = lm_decode_step

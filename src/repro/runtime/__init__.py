@@ -1,0 +1,15 @@
+# repro.runtime — fault tolerance, straggler mitigation, elastic scaling.
+# Pure-python control-plane state machines (unit-testable without TPUs);
+# launch/train.py wires them to the JAX runtime.
+
+from repro.runtime.fault_tolerance import (
+    HeartbeatMonitor, FaultToleranceConfig, RestartPolicy, NodeState,
+)
+from repro.runtime.straggler import StragglerMitigator, StragglerConfig
+from repro.runtime.elastic import ElasticPlanner, ElasticConfig
+
+__all__ = [
+    "HeartbeatMonitor", "FaultToleranceConfig", "RestartPolicy", "NodeState",
+    "StragglerMitigator", "StragglerConfig",
+    "ElasticPlanner", "ElasticConfig",
+]

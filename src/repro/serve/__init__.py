@@ -1,0 +1,6 @@
+# repro.serve — batched serving engine (prefill + decode) over the family-
+# uniform model API, with sharded KV caches / SSM states.
+
+from repro.serve.engine import ServeEngine, ServeConfig, Request
+
+__all__ = ["ServeEngine", "ServeConfig", "Request"]

@@ -1,0 +1,109 @@
+"""Batched serving engine.
+
+Static-batch engine (vLLM-style continuous batching is a scheduling layer
+above this; the per-step compute below is what the decode_* dry-run shapes
+lower): requests are padded into a fixed batch, prefilled once, then
+decoded step-by-step with greedy/temperature sampling.  `serve_step` (the
+jit'd decode) is the artifact the decode_32k / long_500k cells compile.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry as model_registry
+from repro.models.common import Family, ModelConfig
+
+
+@dataclass
+class Request:
+    prompt: list                     # token ids
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    out_tokens: list = field(default_factory=list)
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    batch: int = 8
+    max_len: int = 1024
+    eos_id: int = -1                 # -1: never stop early
+
+
+def make_serve_step(cfg: ModelConfig):
+    """jit'd one-token decode step: (params, token, state) -> (tok, state)."""
+
+    @jax.jit
+    def step(params, token, state, temperature, rng):
+        logits, state = model_registry.decode_step(params, token, cfg, state)
+        lg = logits[:, -1, :cfg.vocab].astype(jnp.float32)  # drop vocab pad
+        greedy = jnp.argmax(lg, axis=-1)
+        sampled = jax.random.categorical(
+            rng, lg / jnp.maximum(temperature, 1e-6), axis=-1)
+        tok = jnp.where(temperature > 0, sampled, greedy)
+        return tok.astype(jnp.int32)[:, None], state
+
+    return step
+
+
+def make_prefill(cfg: ModelConfig):
+    @jax.jit
+    def pre(params, batch, state):
+        return model_registry.prefill(params, batch, cfg, state)
+
+    return pre
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
+        self.cfg, self.params, self.scfg = cfg, params, scfg
+        self._step = make_serve_step(cfg)
+        self._prefill = make_prefill(cfg)
+
+    def _pad_batch(self, requests: List[Request]):
+        B = self.scfg.batch
+        maxp = max(len(r.prompt) for r in requests)
+        toks = np.zeros((B, maxp), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, maxp - len(r.prompt):] = r.prompt  # left-pad
+        return jnp.asarray(toks)
+
+    def run(self, requests: List[Request], *, seed: int = 0,
+            extra: Optional[dict] = None) -> List[Request]:
+        assert len(requests) <= self.scfg.batch
+        while len(requests) < self.scfg.batch:
+            requests.append(Request(prompt=[0], max_new_tokens=0))
+        toks = self._pad_batch(requests)
+        state = model_registry.make_decode_state(
+            self.cfg, self.scfg.batch, self.scfg.max_len,
+            **({"enc": None} if self.cfg.family != Family.ENCDEC else {}))
+        batch = {"tokens": toks}
+        if extra:
+            batch.update(extra)
+        logits, state = self._prefill(self.params, batch, state)
+        tok = jnp.argmax(logits[:, -1, :self.cfg.vocab],
+                         axis=-1).astype(jnp.int32)[:, None]
+        rng = jax.random.PRNGKey(seed)
+        temp = jnp.asarray(max(r.temperature for r in requests),
+                           jnp.float32)
+        n_steps = max(r.max_new_tokens for r in requests)
+        done = np.zeros(self.scfg.batch, bool)
+        for t in range(n_steps):
+            for i, r in enumerate(requests):
+                if not done[i] and len(r.out_tokens) < r.max_new_tokens:
+                    r.out_tokens.append(int(tok[i, 0]))
+                    if int(tok[i, 0]) == self.scfg.eos_id:
+                        done[i] = True
+                else:
+                    done[i] = True
+            if bool(done.all()):
+                break
+            rng, sub = jax.random.split(rng)
+            tok, state = self._step(self.params, tok, state, temp, sub)
+        return requests

@@ -1,0 +1,10 @@
+# repro.sharding — name-based partitioning rules over parameter / input /
+# decode-state pytrees, divisibility-aware (a dim is sharded over an axis
+# only if evenly divisible; otherwise the next candidate or replication).
+
+from repro.sharding.partition import (
+    param_specs, input_specs_sharding, decode_state_specs, ShardingPolicy,
+)
+
+__all__ = ["param_specs", "input_specs_sharding", "decode_state_specs",
+           "ShardingPolicy"]

@@ -1,0 +1,212 @@
+"""Partitioning rules: parameter-name -> dimension roles -> mesh axes.
+
+Role assignment (Megatron-style TP over the "model" axis; DP over
+("pod","data")):
+
+    vocab, heads, ff, inner, experts  ->  "model"   (TP / EP)
+    d (hidden)                        ->  fsdp axis if ShardingPolicy.fsdp
+    batch                             ->  ("pod","data") / ("data",)
+
+Every rule is divisibility-checked against the mesh; a dim that does not
+divide falls back to replication.  Stacked leading dims (the lax.scan layer
+axis, or the hybrid's [n_super, period] prefix) are auto-detected by rank.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import Family, ModelConfig
+
+# parameter-name -> dimension roles (rightmost dims; leading stacked dims
+# are padded with None automatically)
+_ROLE_RULES = {
+    "embed": ("vocab", "d"),
+    "lm_head": ("d", "vocab"),
+    "pos_enc": (None, "d"),
+    "wq": ("d", "heads"), "wk": ("d", "heads"), "wv": ("d", "heads"),
+    "wo": ("heads", "d"),
+    "bq": ("heads",), "bk": ("heads",), "bv": ("heads",),
+    "w_in": ("d", "ff"), "w_gate": ("d", "ff"), "w_out": ("ff", "d"),
+    "router": ("d", None),
+    # mamba2 (split projections; see models/mamba2.py docstring)
+    "w_z": ("d", "inner"), "w_x": ("d", "inner"),
+    "w_b": ("d", None), "w_c": ("d", None), "w_dt": ("d", None),
+    "conv_x_w": (None, "inner"), "conv_x_b": ("inner",),
+    "conv_b_w": (None, None), "conv_c_w": (None, None),
+    "conv_bb": (None,), "conv_cb": (None,),
+    "a_log": (None,), "d_skip": (None,), "dt_bias": (None,),
+    "norm_g": ("inner",),
+    "out_proj": ("inner", "d"),
+}
+# MoE expert tensors carry an extra leading experts dim
+_MOE_RULES = {
+    "w_in": ("experts", "d", "ff"),
+    "w_gate": ("experts", "d", "ff"),
+    "w_out": ("experts", "ff", "d"),
+}
+_REPLICATED_NAMES = {"ln1", "ln2", "ln_f", "ln_x", "ln", "enc_ln", "gamma"}
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    tp_axis: str = "model"
+    dp_axes: tuple = ("data",)        # ("pod","data") on multi-pod meshes
+    fsdp: bool = False                # shard the "d" role over dp axes
+    #: EP: MoE expert dim over tp_axis (True) vs ff sharding (False)
+    expert_parallel: bool = True
+
+    def role_axis(self, role: Optional[str]):
+        if role is None:
+            return None
+        if role in ("vocab", "heads", "ff", "inner"):
+            return self.tp_axis
+        if role == "experts":
+            return self.tp_axis if self.expert_parallel else None
+        if role == "d":
+            return self.dp_axes if self.fsdp else None
+        if role == "batch":
+            return self.dp_axes
+        return None
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _spec_for_leaf(path_keys, leaf, mesh: Mesh, policy: ShardingPolicy,
+                   cfg: ModelConfig):
+    name = None
+    in_moe = False
+    for k in path_keys:
+        if hasattr(k, "key"):
+            if k.key == "moe":
+                in_moe = True
+            name = k.key
+    if name in _REPLICATED_NAMES or name is None:
+        return P()
+    roles = None
+    if in_moe and name in _MOE_RULES and leaf.ndim >= 3:
+        roles = _MOE_RULES[name]
+    elif name in _ROLE_RULES:
+        roles = _ROLE_RULES[name]
+    if roles is None:
+        return P()
+    ndim = leaf.ndim
+    pad = ndim - len(roles)
+    if pad < 0:  # scalar-ish leaf with fewer dims than roles
+        roles = roles[-ndim:]
+        pad = 0
+    spec = [None] * pad
+    used: set = set()
+    for i, role in enumerate(roles):
+        axis = policy.role_axis(role)
+        dim = leaf.shape[pad + i]
+        flat = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
+        if (axis is not None and dim % _axis_size(mesh, axis) == 0
+                and not (used & set(flat))):
+            spec.append(axis)
+            used |= set(flat)
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def param_specs(params, cfg: ModelConfig, mesh: Mesh,
+                policy: ShardingPolicy | None = None):
+    """Pytree of NamedSharding matching `params`."""
+    policy = policy or default_policy(mesh)
+
+    def fn(path, leaf):
+        return NamedSharding(mesh, _spec_for_leaf(path, leaf, mesh, policy,
+                                                  cfg))
+
+    return jax.tree_util.tree_map_with_path(fn, params)
+
+
+def default_policy(mesh: Mesh) -> ShardingPolicy:
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return ShardingPolicy(tp_axis="model", dp_axes=dp)
+
+
+def input_specs_sharding(specs: dict, cfg: ModelConfig, mesh: Mesh,
+                         policy: ShardingPolicy | None = None):
+    """Shardings for the input_specs dict (tokens/labels/frames/patches):
+    batch over dp axes (when divisible), everything else replicated.
+    For `long_500k` (global_batch=1) the sequence dim is sharded over the
+    dp axes instead, so the KV/cache pressure spreads."""
+    policy = policy or default_policy(mesh)
+    dp = policy.dp_axes
+    dp_size = _axis_size(mesh, dp)
+    out = {}
+    for k, v in specs.items():
+        spec = [None] * len(v.shape)
+        if v.shape and v.shape[0] % dp_size == 0 and v.shape[0] > 1:
+            spec[0] = dp
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def decode_state_specs(state, cfg: ModelConfig, mesh: Mesh,
+                       policy: ShardingPolicy | None = None):
+    """Shardings for decode states (KV caches / SSM states).
+
+    Rules per leaf (by rank/shape, since state pytrees are uniform):
+      * batch dim (the first dim whose size == runtime batch) -> dp axes
+        when divisible;
+      * KV-cache head dim -> tp when divisible, else the sequence dim
+        -> tp (long-context: spreads the 500k cache);
+      * SSM state dims -> tp on the heads dim when divisible.
+    """
+    policy = policy or default_policy(mesh)
+    tp = policy.tp_axis
+    tp_size = mesh.shape[tp]
+    dp = policy.dp_axes
+    dp_size = _axis_size(mesh, dp)
+
+    def fn(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = [None] * leaf.ndim
+        names = [getattr(k, "name", getattr(k, "key", "")) for k in path]
+        # KV caches: [..., B, S, Hkv, hd]; mamba ssm: [..., B, H, N, P];
+        # conv states: [..., B, K-1, C]
+        if leaf.ndim >= 4:
+            b_dim = leaf.ndim - 4
+            s_dim, h_dim = leaf.ndim - 3, leaf.ndim - 2
+            batch_sharded = (leaf.shape[b_dim] % dp_size == 0
+                             and leaf.shape[b_dim] > 1)
+            if batch_sharded:
+                spec[b_dim] = dp
+            if leaf.shape[h_dim] % tp_size == 0:
+                spec[h_dim] = tp
+                # long-context decode (global_batch == 1): spread the huge
+                # seq dim over the idle dp axes instead
+                if not batch_sharded and leaf.shape[s_dim] % dp_size == 0 \
+                        and leaf.shape[s_dim] > dp_size:
+                    spec[s_dim] = dp
+            elif leaf.shape[s_dim] % tp_size == 0:
+                spec[s_dim] = tp
+        elif leaf.ndim >= 2:
+            b_dim = 0 if leaf.ndim == 2 else leaf.ndim - 3
+            c_dim = leaf.ndim - 1
+            if leaf.shape[b_dim] % dp_size == 0 and leaf.shape[b_dim] > 1:
+                spec[b_dim] = dp
+            if leaf.shape[c_dim] % tp_size == 0:
+                spec[c_dim] = tp
+        del names
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(fn, state)

@@ -1,0 +1,11 @@
+# repro.train — optimizer, loss, train step, gradient communication.
+
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.train.train_step import TrainConfig, make_train_step, loss_fn
+from repro.train.grad_comm import GradCommConfig, compress_decompress, bucketize
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+    "TrainConfig", "make_train_step", "loss_fn",
+    "GradCommConfig", "compress_decompress", "bucketize",
+]

@@ -1,0 +1,151 @@
+"""Loss + jit'd train step with explicit in/out shardings.
+
+Cross-entropy streams over the sharded vocab dim (take_along_axis +
+logsumexp in fp32) — the [B,S,V] logits stay bf16 and vocab-sharded, never
+materialized replicated (paligemma's 257k vocab would be ~1 PB replicated
+at train_4k).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry as model_registry
+from repro.models.common import ModelConfig
+from repro.train.optimizer import AdamWConfig, AdamWState, adamw_update
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    microbatch: int = 0        # 0 = no microbatching; else per-step split
+    z_loss: float = 1e-4       # logit-norm regularizer (numerics at scale)
+
+
+def auto_microbatch(cfg: ModelConfig, global_batch: int, seq_len: int,
+                    dp_size: int, *, budget_bytes: float = 3e9) -> int:
+    """Pick a microbatch size so the remat stash (~per-layer saved
+    activations x depth) fits the budget.  Returns 0 (no microbatching)
+    when the full batch already fits.  The microbatch stays a multiple of
+    dp_size so each shard keeps >=1 row."""
+    from repro.models.common import Family
+
+    depth = cfg.n_layers + (cfg.n_encoder_layers or 0)
+    if cfg.family == Family.HYBRID:
+        depth += max(cfg.n_layers // cfg.shared_attn_period, 0)
+    bytes_per_row = seq_len * cfg.d_model * 2 * max(depth, 1) * 1.3
+    # family factors: SSD's quadratic-within-chunk buffers ([Q,Q,H] per
+    # chunk) and MoE dispatch/capacity tensors dominate the plain-residual
+    # estimate
+    if cfg.family in (Family.SSM, Family.HYBRID) and cfg.ssm_chunk:
+        d_inner = cfg.ssm_expand * cfg.d_model
+        heads = max(d_inner // cfg.ssm_head_dim, 1)
+        bytes_per_row *= 1.0 + (2.0 * cfg.ssm_chunk * heads * 4.0
+                                / (cfg.d_model * 2.0))
+    if cfg.family == Family.MOE:
+        bytes_per_row *= 3.0
+    rows_budget = max(int(budget_bytes / bytes_per_row), 1) * dp_size
+    if rows_budget >= global_batch:
+        return 0
+    mb = dp_size
+    while mb * 2 <= rows_budget and global_batch % (mb * 2) == 0:
+        mb *= 2
+    return mb
+
+
+def loss_fn(logits, labels, *, z_loss: float = 0.0):
+    """logits [B,S,V] (any float dtype), labels [B,S] int32 -> scalar f32."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)                      # [B,S]
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    ce = (lse - gold).mean()
+    if z_loss:
+        ce = ce + z_loss * jnp.square(lse).mean()
+    return ce
+
+
+def _step_loss(params, batch, cfg: ModelConfig, tcfg: TrainConfig):
+    logits, aux = model_registry.train_forward(params, batch, cfg)
+    labels = batch["labels"]
+    ce = loss_fn(logits, labels, z_loss=tcfg.z_loss)
+    total = ce + cfg.router_aux_coef * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+def train_step(params, opt_state: AdamWState, batch, *, cfg: ModelConfig,
+               tcfg: TrainConfig):
+    """One optimizer step.  Gradients are averaged over the dp axes by
+    GSPMD (batch is dp-sharded; the partitioner inserts the all-reduce —
+    the baseline "DIRECT" schedule; grad_comm.py provides the explicit
+    alternatives for the §Perf hillclimb)."""
+    if tcfg.microbatch and tcfg.microbatch < batch["tokens"].shape[0]:
+        return _train_step_micro(params, opt_state, batch, cfg=cfg,
+                                 tcfg=tcfg)
+    (loss, metrics), grads = jax.value_and_grad(
+        _step_loss, has_aux=True)(params, batch, cfg, tcfg)
+    new_params, new_opt, opt_metrics = adamw_update(
+        tcfg.optimizer, params, grads, opt_state)
+    metrics = dict(metrics, loss=loss, **opt_metrics)
+    return new_params, new_opt, metrics
+
+
+def _train_step_micro(params, opt_state, batch, *, cfg, tcfg):
+    """Gradient accumulation over microbatches (lax.scan over splits)."""
+    B = batch["tokens"].shape[0]
+    mb = tcfg.microbatch
+    n = B // mb
+
+    def reshape(x):
+        from repro.models.common import constrain, dp_spec
+        r = x.reshape((n, mb) + x.shape[1:])
+        # keep each *microbatch* dp-sharded (the reshape otherwise leaves
+        # the scan axis sharded => every step gathers its slice)
+        return constrain(r, None, dp_spec())
+
+    scanned = jax.tree_util.tree_map(reshape, batch)
+
+    def body(acc, mbatch):
+        (loss, metrics), grads = jax.value_and_grad(
+            _step_loss, has_aux=True)(params, mbatch, cfg, tcfg)
+        acc_g, acc_l = acc
+        acc_g = jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(jnp.float32), acc_g, grads)
+        return (acc_g, acc_l + loss), metrics
+
+    zero_g = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (grads, loss_sum), metrics = jax.lax.scan(
+        body, (zero_g, jnp.zeros((), jnp.float32)), scanned)
+    grads = jax.tree_util.tree_map(lambda g: g / n, grads)
+    new_params, new_opt, opt_metrics = adamw_update(
+        tcfg.optimizer, params, grads, opt_state)
+    last = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+    out_metrics = dict(last, loss=loss_sum / n, **opt_metrics)
+    return new_params, new_opt, out_metrics
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh,
+                    param_shardings, input_shardings, opt_shardings=None):
+    """jit-wrapped step with explicit shardings (dry-run lowers this)."""
+    import jax.tree_util as jtu
+
+    if opt_shardings is None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        scalar = NamedSharding(mesh, P())
+        opt_shardings = AdamWState(step=scalar, m=param_shardings,
+                                   v=jtu.tree_map(lambda s: s,
+                                                  param_shardings))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    scalar = NamedSharding(mesh, P())
+    metric_shardings = None  # let jit infer (all replicated scalars)
+    fn = partial(train_step, cfg=cfg, tcfg=tcfg)
+    return jax.jit(
+        fn,
+        in_shardings=(param_shardings, opt_shardings, input_shardings),
+        out_shardings=(param_shardings, opt_shardings, metric_shardings),
+        donate_argnums=(0, 1),
+    )

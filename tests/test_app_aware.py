@@ -1,0 +1,92 @@
+"""Algorithm 1 (application-aware routing) behaviour tests."""
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.app_aware import AppAwareRouter, RouterConfig
+from repro.core.strategies import ModePerformance, RoutingMode
+
+A, B = RoutingMode.ADAPTIVE_0, RoutingMode.ADAPTIVE_3
+
+
+def router(**kw):
+    return AppAwareRouter(RouterConfig(**kw))
+
+
+def test_starts_adaptive():
+    assert router().current == A
+
+
+def test_small_messages_gated_to_high_bias():
+    r = router(cumulative_threshold_bytes=4096)
+    for _ in range(4):
+        assert r.select(512) == B  # below the 4 KiB gate
+
+
+def test_cumulative_gate_triggers_decision():
+    r = router(cumulative_threshold_bytes=4096)
+    # accumulate 8 x 512B = 4096 -> the 8th call runs the decision
+    for i in range(7):
+        r.select(512)
+    r.observe(1000.0, 0.1)
+    m = r.select(512)
+    assert r.decisions == 1
+    assert m in (A, B)
+
+
+def test_switches_to_high_bias_for_latency_bound():
+    """Small f + B has lower latency => B is selected (paper Fig. 8
+    pingpong/barrier behaviour)."""
+    r = router()
+    r.select(8192)
+    r.observe(latency_cycles=5000.0, stalls_per_flit=0.1)   # ADAPTIVE obs
+    # B estimated via lambda=0.8 (lower L), sigma=1.6 (higher s):
+    # for a small message latency dominates -> B
+    m = r.select(8192)
+    assert m == B
+
+
+def test_stays_adaptive_for_bandwidth_bound():
+    """Huge f => stall term dominates => ADAPTIVE (spread) wins."""
+    r = router()
+    r.select(8192)
+    r.observe(latency_cycles=5000.0, stalls_per_flit=1.0)
+    m = r.select(64 * 1024 * 1024)
+    assert m == A
+
+
+def test_alltoall_uses_increasingly_minimal():
+    r = router()
+    r.select(8192, alltoall=True)
+    r.observe(5000.0, 2.0)
+    m = r.select(64 * 1024 * 1024, alltoall=True)
+    assert m == RoutingMode.ADAPTIVE_1  # default for alltoall, §4.2
+
+
+def test_stale_samples_replaced_by_scaling():
+    r = router(max_sample_age=2)
+    r.select(8192)
+    r.observe(1000.0, 0.5)           # A sample
+    # age the B sample far beyond max_sample_age
+    r.samples[B] = ModePerformance(1.0, 0.0, age=100)
+    r.select(64 * 1024 * 1024)
+    # decision must NOT trust the absurdly-good stale B sample
+    assert r.current == A
+
+
+def test_traffic_fraction_accounting():
+    r = router()
+    r.select(100)
+    r.observe(1.0, 0.0)
+    total = sum(r.sent_bytes_by_mode.values())
+    assert total == 100
+    assert r.traffic_fraction(B) == pytest.approx(1.0)
+
+
+@given(sizes=st.lists(st.integers(64, 1 << 20), min_size=1, max_size=30))
+def test_router_never_crashes_and_modes_valid(sizes):
+    r = router()
+    for s in sizes:
+        m = r.select(s)
+        assert m in (A, B, RoutingMode.ADAPTIVE_1)
+        r.observe(1000.0, 0.2)

@@ -1,0 +1,56 @@
+"""Decode correctness: step-by-step decode must reproduce the teacher-
+forced training logits (same prefix => same next-token distribution).
+
+This is the guard for serving-path optimizations — e.g. the whisper
+cross-KV hoist (§Perf cell 3) would diverge here if it were wrong."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (decode_step, init_params, make_decode_state,
+                          prefill, train_forward)
+from repro.models.common import Family, ModelConfig
+
+CASES = {
+    "dense": dict(family=Family.DENSE, n_layers=3, d_model=48, n_heads=4,
+                  n_kv_heads=2, d_ff=96, vocab=128),
+    "encdec": dict(family=Family.ENCDEC, n_layers=2, n_encoder_layers=2,
+                   d_model=48, n_heads=4, n_kv_heads=4, d_ff=96, vocab=128,
+                   encoder_frames=8, act="gelu", glu=False),
+    "ssm": dict(family=Family.SSM, n_layers=3, d_model=48, n_heads=0,
+                n_kv_heads=0, d_ff=0, vocab=128, ssm_state=8,
+                ssm_head_dim=16, ssm_chunk=4, supports_long_context=True),
+}
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_decode_matches_teacher_forcing(name):
+    cfg = ModelConfig(name=name, remat=False, **CASES[name])
+    params = init_params(cfg, 0)
+    B, S = 2, 12
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab, (B, S)), jnp.int32)
+    batch = {"tokens": toks}
+    if cfg.family == Family.ENCDEC:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_frames, cfg.d_model))
+            * 0.02, jnp.float32)
+    full_logits, _ = train_forward(params, batch, cfg)
+
+    # prefill on the first half, decode the second half token-by-token
+    half = S // 2
+    state = make_decode_state(cfg, B, max_len=S + 2)
+    pre_batch = dict(batch, tokens=toks[:, :half])
+    lg, state = prefill(params, pre_batch, cfg, state)
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0], np.float32),
+        np.asarray(full_logits[:, half - 1], np.float32),
+        rtol=4e-2, atol=4e-2)
+    for t in range(half, S - 1):
+        lg, state = decode_step(params, toks[:, t:t + 1], cfg, state)
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0], np.float32),
+            np.asarray(full_logits[:, t], np.float32),
+            rtol=4e-2, atol=4e-2,
+            err_msg=f"{name}: decode diverges at position {t}")

@@ -1,0 +1,159 @@
+"""Dragonfly topology + simulator: path parity, tiers, crossovers."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.strategies import RoutingMode
+from repro.dragonfly import (DragonflySimulator, DragonflyTopology,
+                             SimParams, TopologyParams)
+from repro.dragonfly.routing import RoutingPolicy, score_candidates, spray_weights
+from repro.dragonfly.topology import PAD, make_allocation
+from repro.dragonfly.traffic import (PATTERNS, alltoall, halo3d, pingpong,
+                                     run_iteration, sweep3d)
+
+TOPO = DragonflyTopology(TopologyParams(n_groups=8))
+
+
+@given(st.integers(0, TOPO.params.n_nodes - 1),
+       st.integers(0, TOPO.params.n_nodes - 1),
+       st.integers(0, 3), st.integers(0, 3), st.integers(0, 31))
+def test_vectorized_paths_match_scalar(src, dst, k, seed, gi):
+    if src == dst:
+        return
+    g1, c1, b1, _ = TOPO.node_coords(np.array([src]))
+    g2, c2, b2, _ = TOPO.node_coords(np.array([dst]))
+    vec = TOPO._minimal_vec(g1, c1, b1, g2, c2, b2,
+                            np.array([k]), np.array([seed]))[0]
+    vec = [int(x) for x in vec if x != PAD]
+    assert vec == TOPO.minimal_path(src, dst, k=k, order_seed=seed)
+    vecn = TOPO._nonmin_vec(g1, c1, b1, g2, c2, b2, np.array([gi]),
+                            np.array([k]), np.array([(k + 1) % 4]))[0]
+    vecn = [int(x) for x in vecn if x != PAD]
+    assert vecn == TOPO.nonminimal_path(src, dst, gi=gi, k1=k,
+                                        k2=(k + 1) % 4)
+
+
+@given(st.integers(0, TOPO.params.n_nodes - 1),
+       st.integers(0, TOPO.params.n_nodes - 1))
+def test_minimal_path_hop_bounds(src, dst):
+    """<=2 hops intra-group, <=5 inter-group (Fig. 1's 5-hop example)."""
+    if src == dst:
+        return
+    p = TOPO.minimal_path(src, dst)
+    g1 = TOPO.node_coords(np.array([src]))[0]
+    g2 = TOPO.node_coords(np.array([dst]))[0]
+    assert len(p) <= (2 if g1 == g2 else 5)
+    for link in p:
+        assert 0 <= link < TOPO.n_links
+
+
+def test_links_are_directed():
+    a = TOPO.chassis_link(0, 0, 1, 2)
+    b = TOPO.chassis_link(0, 0, 2, 1)
+    assert a != b and abs(int(a) - int(b)) == 1
+
+
+def test_allocation_spreads():
+    al = make_allocation(TOPO, 4, spread="inter_nodes", seed=0)
+    gs = {int(TOPO.node_coords(np.array([n]))[0][0]) for n in al.nodes}
+    assert len(gs) == 1
+    al = make_allocation(TOPO, 16, spread="groups:4", seed=0)
+    gs = {int(TOPO.node_coords(np.array([n]))[0][0]) for n in al.nodes}
+    assert len(gs) == 4
+    assert len(set(al.nodes)) == 16
+
+
+def test_sim_deterministic():
+    res = []
+    for _ in range(2):
+        sim = DragonflySimulator(TOPO, SimParams(seed=5))
+        al = make_allocation(TOPO, 2, spread="inter_groups", seed=1)
+        r = run_iteration(sim, al, pingpong(2, 65536),
+                          RoutingPolicy(RoutingMode.ADAPTIVE_0))
+        res.append(r.time_us)
+    assert res[0] == res[1]
+
+
+def test_fig3_tier_tails():
+    """inter_nodes stays clean; inter_groups grows tails (Fig. 3)."""
+    stats = {}
+    for spread in ("inter_nodes", "inter_groups"):
+        ts = []
+        for seed in range(3):
+            sim = DragonflySimulator(TOPO, SimParams(seed=seed))
+            al = make_allocation(TOPO, 2, spread=spread, seed=seed)
+            for _ in range(60):
+                ts.append(run_iteration(
+                    sim, al, pingpong(2, 16384),
+                    RoutingPolicy(RoutingMode.ADAPTIVE_0)).time_us)
+        ts = np.asarray(ts)
+        stats[spread] = (np.median(ts), ts.max())
+    assert stats["inter_groups"][0] > stats["inter_nodes"][0]
+    assert stats["inter_groups"][1] > 5 * stats["inter_nodes"][1]
+
+
+def test_fig7_intra_group_stall_crossover():
+    """4MiB intra-group: HIGH BIAS concentrates on the few minimal paths ->
+    more stalls -> slower than ADAPTIVE (paper Fig. 7a/b)."""
+    med = {}
+    for mode in (RoutingMode.ADAPTIVE_0, RoutingMode.ADAPTIVE_3):
+        ts, ss = [], []
+        for seed in range(3):
+            sim = DragonflySimulator(TOPO, SimParams(seed=seed,
+                                                     bg_enable=False))
+            al = make_allocation(TOPO, 2, spread="inter_chassis", seed=seed)
+            for _ in range(25):
+                r = run_iteration(sim, al, pingpong(2, 4 << 20),
+                                  RoutingPolicy(mode))
+                ts.append(r.time_us)
+                ss.append(r.mean_stalls)
+        med[mode] = (np.median(ts), np.median(ss))
+    assert med[RoutingMode.ADAPTIVE_3][1] > med[RoutingMode.ADAPTIVE_0][1]
+    assert med[RoutingMode.ADAPTIVE_3][0] > med[RoutingMode.ADAPTIVE_0][0]
+
+
+def test_nic_counters_populated():
+    sim = DragonflySimulator(TOPO, SimParams(seed=0))
+    al = make_allocation(TOPO, 2, spread="inter_groups", seed=0)
+    run_iteration(sim, al, pingpong(2, 65536),
+                  RoutingPolicy(RoutingMode.ADAPTIVE_0), )
+    c = sim.counters[al.allocation_id]
+    f, p = 65536 // 64 * 5, 65536 // 64
+    assert c.request_flits == 2 * f      # both pingpong directions
+    assert c.request_packets == 2 * p
+    assert c.request_packets_cumulative_latency_us > 0
+
+
+def test_patterns_shapes():
+    for name, fn in PATTERNS.items():
+        args = {"pingpong": dict(size=1024), "allreduce": dict(elements=64),
+                "alltoall": dict(size_per_pair=512),
+                "barrier": {}, "broadcast": dict(size=2048),
+                "halo3d": dict(nx=64), "sweep3d": dict(nx=64)}[name]
+        phases = fn(16, **args)
+        assert len(phases) >= 1
+        for s, d, b in phases:
+            assert s.shape == d.shape == b.shape
+            assert (s != d).all()
+            assert (s < 16).all() and (d < 16).all()
+
+
+def test_alltoall_flow_count():
+    (s, d, b), = alltoall(8, 128)
+    assert s.size == 8 * 7
+
+
+def test_spray_weights_sum_to_one():
+    rng = np.random.default_rng(0)
+    scores = rng.random((50, 6)) * 1e-5
+    pol = RoutingPolicy(RoutingMode.ADAPTIVE_0)
+    w = spray_weights(scores, pol, rng, packets=np.full(50, 1e4))
+    np.testing.assert_allclose(w.sum(1), 1.0, rtol=1e-9)
+    # deterministic minimal: no weight on nonmin candidates
+    pol = RoutingPolicy(RoutingMode.MIN_HASH)
+    nonmin = np.array([False] * 4 + [True] * 2)
+    sc = score_candidates(np.zeros((5, 6, 8), np.int64), np.zeros(TOPO.n_links),
+                          nonmin, pol)
+    w = spray_weights(sc, pol)
+    assert w[:, 4:].sum() == 0.0

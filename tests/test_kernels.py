@@ -1,0 +1,97 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.ops import rmsnorm_op
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssd_scan.ops import ssd_scan_op
+from repro.models.mamba2 import ssd_chunked
+
+RNG = np.random.default_rng(0)
+
+
+def _mk(shape, dtype):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+@pytest.mark.parametrize("B,H,Hkv,S,hd,bq,bk", [
+    (1, 2, 2, 128, 32, 64, 64),      # MHA
+    (2, 4, 2, 256, 64, 64, 128),     # GQA
+    (1, 8, 1, 128, 32, 32, 64),      # MQA (paligemma-style)
+    (2, 2, 2, 192, 16, 64, 64),      # non-pow2 seq
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(B, H, Hkv, S, hd, bq, bk, causal):
+    q = _mk((B, H, S, hd), jnp.float32)
+    k = _mk((B, Hkv, S, hd), jnp.float32)
+    v = _mk((B, Hkv, S, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_flash_attention_bf16():
+    q = _mk((1, 2, 128, 64), jnp.bfloat16)
+    k = _mk((1, 2, 128, 64), jnp.bfloat16)
+    v = _mk((1, 2, 128, 64), jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 32, 2, 8, 8, 8),
+    (2, 64, 3, 8, 16, 16),
+    (1, 128, 4, 16, 32, 32),
+])
+def test_ssd_kernel_matches_model_oracle(B, S, H, P, N, chunk):
+    x = _mk((B, S, H, P), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.1, 1.0, (B, S, H)), jnp.float32)
+    a_log = jnp.asarray(RNG.uniform(-1, 1, (H,)), jnp.float32)
+    bm = _mk((B, S, H, N), jnp.float32)
+    cm = _mk((B, S, H, N), jnp.float32)
+    y_ref, f_ref = ssd_chunked(x, dt, a_log, bm, cm, chunk)
+    y_k, f_k = ssd_scan_op(x, dt, a_log, bm, cm, chunk, force_kernel=True)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(f_k), np.asarray(f_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_ssd_kernel_state_passing():
+    B, S, H, P, N, chunk = 1, 64, 2, 8, 8, 16
+    x = _mk((B, S, H, P), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.1, 1.0, (B, S, H)), jnp.float32)
+    a_log = jnp.asarray(RNG.uniform(-1, 1, (H,)), jnp.float32)
+    bm = _mk((B, S, H, N), jnp.float32)
+    cm = _mk((B, S, H, N), jnp.float32)
+    y_full, _ = ssd_scan_op(x, dt, a_log, bm, cm, chunk, force_kernel=True)
+    y1, s1 = ssd_scan_op(x[:, :32], dt[:, :32], a_log, bm[:, :32],
+                         cm[:, :32], chunk, force_kernel=True)
+    y2, _ = ssd_scan_op(x[:, 32:], dt[:, 32:], a_log, bm[:, 32:],
+                        cm[:, 32:], chunk, init_state=s1, force_kernel=True)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y_full),
+        rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("shape", [(8, 64), (3, 5, 128), (2, 7, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_kernel_matches_ref(shape, dtype):
+    x = _mk(shape, dtype)
+    g = _mk((shape[-1],), jnp.float32)
+    out = rmsnorm_op(x, g, force_kernel=True)
+    ref = rmsnorm_ref(x, g)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)

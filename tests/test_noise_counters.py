@@ -1,0 +1,81 @@
+"""§3 methodology: counters, windows, QCD, allocation guards."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.counters import CounterWindow, InMemoryBackend, NICCounters
+from repro.core.noise import AllocationMismatch, NoiseEstimator, iqr, qcd
+
+
+def test_counter_window_deltas_normalized():
+    be = InMemoryBackend()
+    w = CounterWindow(be)
+    w.read()  # prime
+    be.counters.observe(flits=1000, stalled_cycles=500, packets=200,
+                        latency_us_total=400.0)
+    be.advance(2.0)
+    d = w.read()
+    assert d.flits == 1000
+    assert d.stalls_per_flit == pytest.approx(0.5)
+    assert d.mean_latency_us == pytest.approx(2.0)
+    assert d.flit_rate == pytest.approx(500.0)  # per-second (§3.2 guard)
+
+
+def test_counter_window_second_read_zero():
+    be = InMemoryBackend()
+    w = CounterWindow(be)
+    w.read()
+    be.counters.observe(10, 1, 2, 1.0)
+    be.advance(1.0)
+    w.read()
+    d = w.read()
+    assert d.flits == 0 and d.packets == 0
+
+
+def test_table1_correlation_is_not_causation():
+    """An idle app observing for 2x longer sees ~2x the flits; the windowed
+    flit RATE stays constant — the §3.2 fix."""
+    rates = []
+    for idle_s in (1.0, 2.0):
+        be = InMemoryBackend()
+        w = CounterWindow(be)
+        w.read()
+        bg_rate = 110e6
+        be.counters.observe(int(bg_rate * idle_s), 0, 1, 0.0)
+        be.advance(idle_s)
+        d = w.read()
+        rates.append(d.flit_rate)
+    assert rates[0] == pytest.approx(rates[1], rel=1e-6)
+
+
+def test_qcd_range_and_known_value():
+    assert qcd([1, 1, 1, 1]) == 0.0
+    data = [1, 2, 3, 4]  # q1=1.75 q3=3.25 -> 1.5/5 = .3
+    assert qcd(data) == pytest.approx(0.3)
+    assert iqr(data) == pytest.approx(1.5)
+
+
+@given(st.lists(st.floats(0.1, 1e6), min_size=4, max_size=200))
+def test_qcd_bounded_for_positive_data(xs):
+    v = qcd(xs)
+    assert 0.0 <= v <= 1.0
+
+
+def test_allocation_mismatch_guard():
+    est = NoiseEstimator("allocA")
+    est.add(allocation_id="allocA", exec_us=1.0, latency_us=1.0,
+            stalls_per_flit=0.0)
+    with pytest.raises(AllocationMismatch):
+        est.add(allocation_id="allocB", exec_us=1.0, latency_us=1.0,
+                stalls_per_flit=0.0)
+
+
+def test_noise_report_outlier_ratio():
+    est = NoiseEstimator("a")
+    for v in [1.0] * 99 + [100.0]:
+        est.add(allocation_id="a", exec_us=v, latency_us=v,
+                stalls_per_flit=0.0)
+    rep = est.report()
+    assert rep.outlier_ratio == pytest.approx(0.01)
+    assert rep.network_noise == rep.qcd_latency

@@ -1,0 +1,176 @@
+"""TPU adaptation: app-aware collective selector, HLO parsing, roofline."""
+
+import numpy as np
+import pytest
+
+from repro.analysis.hlo_parse import (CollectiveOp, parse_hlo,
+                                      parse_replica_groups, shape_bytes)
+from repro.analysis.roofline import (classify_collective,
+                                     model_flops_estimate,
+                                     param_counts_analytic, roofline_terms)
+from repro.collectives.hlo_counters import HloCounterBackend
+from repro.collectives.modes import CollectiveMode, mode_for_routing
+from repro.collectives.selector import AppAwareSelector, ICICostModel, MeshSpec
+from repro.configs import SHAPES, get_config
+from repro.core.strategies import RoutingMode
+
+
+# ----------------------------------------------------------------- parser
+def test_shape_bytes():
+    assert shape_bytes("f32[2,3]{1,0}") == 24
+    assert shape_bytes("bf16[10]") == 20
+    assert shape_bytes("(f32[2], /*index=1*/s32[4])") == 24
+    assert shape_bytes("pred[]") == 1
+
+
+def test_replica_groups_iota():
+    gs, g0 = parse_replica_groups("replica_groups=[2,4]<=[8]")
+    assert gs == 4 and g0 == (0, 1, 2, 3)
+    gs, g0 = parse_replica_groups("replica_groups=[4,2]<=[2,4]T(1,0)")
+    assert gs == 2 and g0 == (0, 4)
+
+
+def test_replica_groups_explicit():
+    gs, g0 = parse_replica_groups("replica_groups={{0,2},{1,3}}")
+    assert gs == 2 and g0 == (0, 2)
+
+
+def test_parse_hlo_trip_count_scaling():
+    """While body costs multiply by known_trip_count (the probed XLA
+    undercount this module exists to fix)."""
+    txt = """
+HloModule test, is_scheduled=true
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %w = f32[8,8]{1,0} constant({...})
+  %d = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups=[2,4]<=[8], to_apply=%body
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%i2, %ar)
+}
+
+%cond (p2: (s32[], f32[8,8])) -> pred[] {
+  %p2 = (s32[], f32[8,8]) parameter(0)
+  %i3 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i3, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%z, %a)
+  %w0 = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w0), index=1
+}
+"""
+    costs = parse_hlo(txt)
+    assert costs.n_while == 1 and costs.trip_counts == [5]
+    assert costs.flops == pytest.approx(5 * 2 * 8 * 8 * 8)
+    assert len(costs.collectives) == 1
+    c = costs.collectives[0]
+    assert c.multiplier == 5 and c.group_size == 4
+    # ring all-reduce: 2*(n-1)/n * payload
+    assert c.wire_bytes() == pytest.approx(2 * 3 / 4 * 256)
+
+
+# --------------------------------------------------------------- roofline
+def test_classify_collective_pod_boundary():
+    assert classify_collective((0, 1, 2), (2, 16, 16)) == "intra"
+    assert classify_collective((0, 256), (2, 16, 16)) == "cross_pod"
+    assert classify_collective((0, 1), (16, 16)) == "intra"
+
+
+def test_param_counts_analytic_close_to_real():
+    cfg = get_config("llama3-8b")
+    total, active = param_counts_analytic(cfg)
+    assert total == active
+    assert 7.5e9 < total < 8.6e9     # llama3-8b ~ 8.03B
+    moe = get_config("qwen2-moe-a2.7b")
+    t, a = param_counts_analytic(moe)
+    assert a < t                     # MoE active < total
+    assert 12e9 < t < 16e9           # ~14.3B total
+    assert 2e9 < a < 4e9             # ~2.7B active
+
+
+def test_model_flops_train_rule():
+    cfg = get_config("llama3-8b")
+    sh = SHAPES["train_4k"]
+    mf = model_flops_estimate(cfg, sh)
+    total, _ = param_counts_analytic(cfg)
+    assert mf == pytest.approx(6.0 * total * 256 * 4096)
+
+
+def test_roofline_dominant_term():
+    costs_like = parse_hlo("""
+HloModule m, is_scheduled=true
+ENTRY %main (a: f32[128,128]) -> f32[128,128] {
+  %a = f32[128,128]{1,0} parameter(0)
+  ROOT %d = f32[128,128]{1,0} dot(%a, %a), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+""")
+    rep = roofline_terms(costs_like, arch="x", shape="train_4k",
+                         mesh_shape=(16, 16), model_flops=1e15)
+    assert rep.dominant in ("compute", "memory", "collective")
+    assert rep.chips == 256
+    assert rep.bound_s == max(rep.compute_s, rep.memory_s,
+                              rep.collective_s)
+
+
+# --------------------------------------------------------------- selector
+def test_mode_mapping_table():
+    assert mode_for_routing(RoutingMode.ADAPTIVE_3) == CollectiveMode.DIRECT
+    assert mode_for_routing(RoutingMode.ADAPTIVE_0) == \
+        CollectiveMode.HIERARCHICAL
+
+
+def test_cost_model_crossover():
+    """DIRECT (minimal) wins small messages on latency; HIERARCHICAL
+    (spread) wins big messages on slow-link serialization — the paper's
+    message-size crossover on the TPU mesh."""
+    cm = ICICostModel(MeshSpec(n_pods=2, inner_chips=256))
+    small_d = cm.predict(1024, CollectiveMode.DIRECT)
+    small_h = cm.predict(1024, CollectiveMode.HIERARCHICAL)
+    assert small_d.latency_cycles < small_h.latency_cycles
+    big_d = cm.predict(256 << 20, CollectiveMode.DIRECT)
+    big_h = cm.predict(256 << 20, CollectiveMode.HIERARCHICAL)
+    assert big_h.stall_cycles_per_flit < big_d.stall_cycles_per_flit
+
+
+def test_selector_switches_by_size():
+    sel = AppAwareSelector(ICICostModel(MeshSpec(n_pods=2, inner_chips=256)))
+    small = sel.select(2048)
+    sel.observe_predicted(2048)
+    assert small == CollectiveMode.DIRECT
+    for _ in range(4):
+        big = sel.select(64 << 20)
+        sel.observe_predicted(64 << 20)
+    assert big == CollectiveMode.HIERARCHICAL
+    assert 0.0 <= sel.traffic_fraction_direct() < 0.5
+
+
+def test_selector_single_pod_prefers_direct():
+    sel = AppAwareSelector(ICICostModel(MeshSpec(n_pods=1, inner_chips=256)))
+    for _ in range(4):
+        m = sel.select(64 << 20)
+        sel.observe_predicted(64 << 20)
+    assert m == CollectiveMode.DIRECT   # no slow links to spare
+
+
+def test_hlo_counter_backend_feeds_algorithm1():
+    costs = parse_hlo("""
+HloModule m, is_scheduled=true
+ENTRY %main (a: f32[1048576]) -> f32[1048576] {
+  %a = f32[1048576]{0} parameter(0)
+  ROOT %ar = f32[1048576]{0} all-reduce(%a), replica_groups=[1,512]<=[512]
+}
+""")
+    be = HloCounterBackend(mesh_shape=(2, 16, 16))
+    be.observe_step(costs, compute_window_s=1e-3)
+    c = be.read_counters()
+    assert c.request_packets > 0
+    assert c.request_packets_cumulative_latency_us > 0
