@@ -1,0 +1,17 @@
+# CI entry points (see also pyproject.toml: `python -m pytest` needs no
+# PYTHONPATH — pytest's pythonpath=["src"] handles the src layout).
+
+PY ?= python
+
+.PHONY: test bench-smoke lint
+
+test:
+	$(PY) -m pytest -q
+
+# reduced benchmark pass (the CI perf smoke; --full is the paper-scale run)
+bench-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.run --only fig7,fig8,tpu --policy app_aware
+
+lint:
+	$(PY) -m compileall -q src benchmarks examples tests
+	$(PY) scripts/ci_lint.py

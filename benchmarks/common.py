@@ -43,4 +43,6 @@ MODES3 = (RoutingMode.ADAPTIVE_0, RoutingMode.ADAPTIVE_3, "app_aware")
 MODE_LABEL = {RoutingMode.ADAPTIVE_0: "default",
               RoutingMode.ADAPTIVE_1: "incmin",
               RoutingMode.ADAPTIVE_3: "highbias",
-              "app_aware": "appaware"}
+              "app_aware": "appaware",
+              "eps_greedy": "epsgreedy",
+              "static": "staticpol"}

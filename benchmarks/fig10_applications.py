@@ -11,13 +11,12 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import DAINT, MODE_LABEL, emit
-from repro.core.app_aware import AppAwareRouter, RouterConfig
 from repro.core.strategies import RoutingMode
 from repro.dragonfly import DragonflySimulator, DragonflyTopology, SimParams
 from repro.dragonfly.routing import RoutingPolicy
 from repro.dragonfly.topology import make_allocation
-from repro.dragonfly.traffic import (PATTERNS, run_iteration,
-                                     run_iteration_app_aware)
+from repro.dragonfly.traffic import (PATTERN_KIND, PATTERNS, engine_for_arm,
+                                     run_iteration, run_iteration_engine)
 
 # app -> (pattern, args, ranks, comm_fraction)
 APPS = {
@@ -32,22 +31,21 @@ APPS = {
     "fft-256": ("alltoall", dict(size_per_pair=131072), 256, 0.6),
     "fft-64": ("alltoall", dict(size_per_pair=131072), 64, 0.6),
 }
-MODES = (RoutingMode.ADAPTIVE_0, RoutingMode.ADAPTIVE_3, "app_aware")
-
-
-def run_app(topo, name, pattern, args, ranks, comm_frac, iters, seed=0):
+def run_app(topo, name, pattern, args, ranks, comm_frac, iters, seed=0,
+            policy: str = "app_aware"):
+    modes = (RoutingMode.ADAPTIVE_0, RoutingMode.ADAPTIVE_3, policy)
     sim = DragonflySimulator(topo, SimParams(seed=seed, max_flows=40_000))
     al = make_allocation(topo, ranks, spread="groups:6", seed=seed)
     phases = PATTERNS[pattern](ranks, **args)
-    a2a = pattern == "alltoall"
-    router = AppAwareRouter(RouterConfig())
+    kind = PATTERN_KIND[pattern]
+    engine = engine_for_arm(policy, sim, seed=seed)
     rng = np.random.default_rng(seed)
-    out = {m: [] for m in MODES}
+    out = {m: [] for m in modes}
     for _ in range(iters):
-        for m in MODES:
-            if m == "app_aware":
-                r = run_iteration_app_aware(sim, al, phases, router,
-                                            alltoall_site=a2a)
+        for m in modes:
+            if isinstance(m, str):
+                r = run_iteration_engine(sim, al, phases, engine,
+                                         site=name, kind=kind)
             else:
                 r = run_iteration(sim, al, phases, RoutingPolicy(m))
             comm = r.time_us
@@ -57,15 +55,17 @@ def run_app(topo, name, pattern, args, ranks, comm_frac, iters, seed=0):
     return out
 
 
-def main(full: bool = False):
+def main(full: bool = False, policy: str = "app_aware"):
     topo = DragonflyTopology(DAINT)
     iters = 8 if full else 4
+    modes = (RoutingMode.ADAPTIVE_0, RoutingMode.ADAPTIVE_3, policy)
     apps = APPS if full else {k: APPS[k] for k in
                               ("cp2k", "milc", "fft-256", "fft-64", "bfs")}
     for name, (pattern, args, ranks, frac) in apps.items():
-        res = run_app(topo, name, pattern, args, ranks, frac, iters)
+        res = run_app(topo, name, pattern, args, ranks, frac, iters,
+                      policy=policy)
         med_def = np.median(res[RoutingMode.ADAPTIVE_0])
-        for m in MODES:
+        for m in modes:
             ts = np.asarray(res[m])
             emit(f"fig10.{name}.{MODE_LABEL[m]}", float(np.median(ts)),
                  f"norm={float(np.median(ts) / med_def):.3f}")

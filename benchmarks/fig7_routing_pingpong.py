@@ -13,9 +13,9 @@ from benchmarks.common import DAINT, boxstats, emit
 from repro.core.perf_model import predict_transmission_cycles
 from repro.core.strategies import RoutingMode
 from repro.dragonfly import DragonflySimulator, DragonflyTopology, SimParams
-from repro.dragonfly.routing import RoutingPolicy
 from repro.dragonfly.topology import make_allocation
-from repro.dragonfly.traffic import pingpong, run_iteration
+from repro.dragonfly.traffic import pingpong, run_iteration_engine
+from repro.policy import PolicyEngine, StaticPolicy, TelemetryBus
 
 SIZE = 4 << 20
 MODES = (RoutingMode.ADAPTIVE_0, RoutingMode.ADAPTIVE_3)
@@ -30,10 +30,18 @@ def run(iters: int = 40, seeds: int = 4):
         for seed in range(seeds):
             sim = DragonflySimulator(topo, SimParams(seed=seed))
             al = make_allocation(topo, 2, spread=tier, seed=seed)
+            # static arms through the same engine API as the adaptive
+            # ones: StaticPolicy, one vectorized decide per phase
+            engines = {m: PolicyEngine(
+                StaticPolicy(m),
+                bus=TelemetryBus(clock_ghz=sim.params.nic_clock_ghz))
+                for m in MODES}
             for _ in range(iters):
                 for m in MODES:              # §5: alternate per iteration
-                    r = run_iteration(sim, al, pingpong(2, SIZE),
-                                      RoutingPolicy(m))
+                    r = run_iteration_engine(
+                        sim, al, pingpong(2, SIZE), engines[m],
+                        site=f"pingpong.{tier}",
+                        counter_read_overhead_us=0.0)
                     res[m]["t"].append(r.time_us)
                     res[m]["l"].append(r.mean_latency_us)
                     res[m]["s"].append(r.mean_stalls)
@@ -53,8 +61,9 @@ def main(full: bool = False):
             st = boxstats(d["t"])
             emit(f"fig7.{tier}.{name}.time", st["median"],
                  f"qcd={st['qcd']:.3f}")
+            lat_cv = float(np.std(d["l"]) / max(np.mean(d["l"]), 1e-9))
             emit(f"fig7.{tier}.{name}.latency",
-                 float(np.median(d["l"])), f"qcd={float(np.std(d['l']) / max(np.mean(d['l']), 1e-9)):.3f}")
+                 float(np.median(d["l"])), f"qcd={lat_cv:.3f}")
             emit(f"fig7.{tier}.{name}.stalls",
                  float(np.median(d["s"]) * 1e3), "milli_cycles_per_flit")
             emit(f"fig7.{tier}.{name}.model_estimate",

@@ -24,11 +24,14 @@ SWEEP = {
     "halo3d": [dict(nx=256), dict(nx=768)],
     "sweep3d": [dict(nx=256), dict(nx=768)],
 }
-MODES = (RoutingMode.ADAPTIVE_0, RoutingMode.ADAPTIVE_3, "app_aware")
 
 
 def run(machine: str = "daint", iters: int = 8, seed: int = 0,
-        max_flows: int = 60_000, full_scale: bool = True):
+        max_flows: int = 60_000, full_scale: bool = True,
+        policy: str = "app_aware"):
+    """`policy` picks the adaptive arm ("app_aware" | "eps_greedy" |
+    "static") — the repro.policy engine driving the third column."""
+    modes = (RoutingMode.ADAPTIVE_0, RoutingMode.ADAPTIVE_3, policy)
     if machine == "daint":
         topo = DragonflyTopology(DAINT)
         n_ranks, groups = (1024 if full_scale else 256), "groups:6"
@@ -41,35 +44,36 @@ def run(machine: str = "daint", iters: int = 8, seed: int = 0,
             sim = DragonflySimulator(topo, SimParams(seed=seed,
                                                      max_flows=max_flows))
             al = make_allocation(topo, n_ranks, spread=groups, seed=seed)
-            res = run_benchmark(sim, al, bench, args, iters, modes=MODES)
+            res = run_benchmark(sim, al, bench, args, iters, modes=modes)
             key = f"{bench}." + (".".join(f"{v}" for v in args.values())
                                  or "na")
             med_def = np.median([r.time_us
                                  for r in res[RoutingMode.ADAPTIVE_0]])
             row = {"default_median_us": float(med_def)}
-            for m in MODES:
+            for m in modes:
                 ts = np.array([r.time_us for r in res[m]])
                 row[MODE_LABEL[m]] = {
                     "norm_median": float(np.median(ts) / med_def),
                     "qcd": boxstats(ts)["qcd"],
                 }
-            aa = res["app_aware"]
+            aa = res[policy]
             frac = np.mean([
                 sum(v for k, v in r.mode_bytes.items()
                     if k in (RoutingMode.ADAPTIVE_0, RoutingMode.ADAPTIVE_1))
                 / max(sum(r.mode_bytes.values()), 1e-9) for r in aa])
-            row["appaware_pct_default_traffic"] = float(frac * 100)
+            row["policy_pct_default_traffic"] = float(frac * 100)
             out[key] = row
     return out
 
 
-def main(full: bool = False):
+def main(full: bool = False, policy: str = "app_aware"):
+    label = MODE_LABEL[policy]
     for machine, tag in (("daint", "fig8"), ("cori", "fig9")):
         if not full and machine == "cori":
             continue
         res = run(machine, iters=10 if full else 4,
                   max_flows=80_000 if full else 30_000,
-                  full_scale=full)
+                  full_scale=full, policy=policy)
         wins = 0
         cells = 0
         for key, row in res.items():
@@ -78,16 +82,16 @@ def main(full: bool = False):
             emit(f"{tag}.{key}.highbias",
                  row["default_median_us"] * row["highbias"]["norm_median"],
                  f"norm={row['highbias']['norm_median']:.3f}")
-            emit(f"{tag}.{key}.appaware",
-                 row["default_median_us"] * row["appaware"]["norm_median"],
-                 f"norm={row['appaware']['norm_median']:.3f};"
-                 f"pct_default={row['appaware_pct_default_traffic']:.0f}%")
+            emit(f"{tag}.{key}.{label}",
+                 row["default_median_us"] * row[label]["norm_median"],
+                 f"norm={row[label]['norm_median']:.3f};"
+                 f"pct_default={row['policy_pct_default_traffic']:.0f}%")
             best = min(row["default"]["norm_median"] if False else 1.0,
                        row["highbias"]["norm_median"])
             cells += 1
-            if row["appaware"]["norm_median"] <= best * 1.10:
+            if row[label]["norm_median"] <= best * 1.10:
                 wins += 1
-        emit(f"{tag}.check.appaware_within10pct_of_best",
+        emit(f"{tag}.check.{label}_within10pct_of_best",
              wins / max(cells, 1) * 100, f"{wins}/{cells} cells")
     return None
 

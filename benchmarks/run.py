@@ -15,6 +15,11 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. fig3,fig7")
+    ap.add_argument("--policy", default="app_aware",
+                    choices=("static", "app_aware", "eps_greedy"),
+                    help="adaptive arm for the policy-driven suites "
+                         "(fig8, fig10): which repro.policy engine to run "
+                         "against the static Default/HIGH-BIAS arms")
     args = ap.parse_args(argv)
 
     from benchmarks import (fig3_allocation, fig4_fig5_hostnoise,
@@ -31,11 +36,14 @@ def main(argv=None) -> None:
         "model": model_validation.main,
         "tpu": tpu_selector.main,
     }
+    #: suites whose adaptive arm is a pluggable repro.policy engine
+    policy_suites = {"fig8", "fig10"}
     chosen = (args.only.split(",") if args.only else list(suites))
     print("name,us_per_call,derived")
     for key in chosen:
         t0 = time.time()
-        suites[key](full=args.full)
+        kw = {"policy": args.policy} if key in policy_suites else {}
+        suites[key](full=args.full, **kw)
         print(f"# {key} done in {time.time() - t0:.1f}s", file=sys.stderr)
 
 

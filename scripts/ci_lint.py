@@ -1,0 +1,16 @@
+"""Dependency-free lint: line length + trailing whitespace over src/."""
+
+import pathlib
+import re
+import sys
+
+bad = []
+for root in ("src", "benchmarks", "examples"):
+    for p in pathlib.Path(root).rglob("*.py"):
+        for i, line in enumerate(p.read_text().splitlines(), 1):
+            if len(line) > 100:
+                bad.append(f"{p}:{i}: line too long ({len(line)} > 100)")
+            if re.search(r"[ \t]+$", line):
+                bad.append(f"{p}:{i}: trailing whitespace")
+print("\n".join(bad))
+sys.exit(1 if bad else 0)

@@ -14,7 +14,40 @@ from dataclasses import dataclass, field
 
 import jax
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ModuleNotFoundError:
+    # Container without zstandard: fall back to zlib compression behind
+    # the same two-class interface.  Fallback checkpoints are NOT
+    # zstd-readable (and vice versa) — the decompressor checks the zstd
+    # frame magic so a cross-environment restore fails with a clear
+    # message instead of a bare zlib.error.
+    import zlib
+
+    _ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+    class _ZlibCompressor:
+        def __init__(self, level: int = 3):
+            self._level = level
+
+        def compress(self, data: bytes) -> bytes:
+            return zlib.compress(data, self._level)
+
+    class _ZlibDecompressor:
+        def decompress(self, data: bytes) -> bytes:
+            if data[:4] == _ZSTD_MAGIC:
+                raise RuntimeError(
+                    "checkpoint was written with zstandard, which is not "
+                    "installed here — install zstandard to restore it")
+            return zlib.decompress(data)
+
+    class _ZstdShim:
+        ZstdCompressor = staticmethod(
+            lambda level=3: _ZlibCompressor(level))
+        ZstdDecompressor = staticmethod(_ZlibDecompressor)
+
+    zstd = _ZstdShim()
 
 
 def _flatten_with_names(tree):

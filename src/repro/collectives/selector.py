@@ -1,7 +1,7 @@
 """Application-aware collective-schedule selection — Algorithm 1 on TPU.
 
-`AppAwareSelector` arbitrates DIRECT vs HIERARCHICAL per collective call
-site, reusing repro.core.app_aware.AppAwareRouter verbatim: mode_a (the
+`AppAwareSelector` is a thin adapter over the unified policy API
+(repro.policy.PolicyEngine + AppAwarePolicy): mode_a (the
 "adaptive"/spread schedule) = HIERARCHICAL, mode_b (the minimal/low-latency
 schedule) = DIRECT.  Small messages are latency-bound -> DIRECT (fewest
 phases), exactly like the paper's 4 KiB high-bias gate; large messages are
@@ -10,7 +10,7 @@ bytes/dcn_bw dominates the extra phase latency.
 
 `ICICostModel` supplies the a-priori (L, s) estimates per mode the same
 way the paper's λ/σ scaling factors do; live observations (HLO counters or
-measured step times) refine them through router.observe().
+measured step times) refine them through the engine's TelemetryBus.
 """
 
 from __future__ import annotations
@@ -18,9 +18,10 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from repro.collectives.modes import CollectiveMode
-from repro.core.app_aware import AppAwareRouter, RouterConfig
 from repro.core.strategies import ModePerformance
 from repro.analysis.roofline import HwSpec, V5E
+from repro.policy import (AppAwareConfig, AppAwarePolicy, DecisionBatch,
+                          KIND_ALLTOALL, KIND_PT2PT, PolicyEngine)
 
 NS_PER_CYCLE = 1.0  # 1 GHz NIC-cycle convention, matching hlo_counters
 
@@ -80,22 +81,26 @@ class ICICostModel:
 
 @dataclass
 class AppAwareSelector:
-    """Per-call-site Algorithm 1 instance for collective scheduling."""
+    """Thin adapter: the legacy per-call scalar API over a PolicyEngine.
+
+    Batched callers (grad_comm's per-step bucket list) should use
+    `decide_batch`; `select`/`observe*` keep the seed's scalar protocol
+    for existing call sites."""
 
     cost_model: ICICostModel
-    router: AppAwareRouter = None
-    #: traffic log (mode -> bytes), mirrors Fig. 8's %-default reporting
+    engine: PolicyEngine = None
+    #: traffic log (size, mode), mirrors Fig. 8's %-default reporting
     decisions: list = field(default_factory=list)
 
     def __post_init__(self):
-        if self.router is None:
+        if self.engine is None:
             lam, sig = self._calibrate_scaling()
-            self.router = AppAwareRouter(RouterConfig(
+            self.engine = PolicyEngine(AppAwarePolicy(AppAwareConfig(
                 mode_a=CollectiveMode.HIERARCHICAL,
                 mode_a_alltoall=CollectiveMode.HIERARCHICAL,
                 mode_b=CollectiveMode.DIRECT,
                 lambda_latency=lam, sigma_stalls=sig,
-            ))
+            ), granularity="message"))
 
     def _calibrate_scaling(self):
         """λ, σ from the cost model at a reference size (the paper derives
@@ -112,23 +117,52 @@ class AppAwareSelector:
         sig = min(max(sig, 0.05), 20.0)
         return lam, sig
 
+    # ------------------------------------------------------------ batch API
+    def decide_batch(self, sizes_bytes, *, site="default",
+                     alltoall: bool = False):
+        """One engine call for a batch of collective payloads."""
+        kind = KIND_ALLTOALL if alltoall else KIND_PT2PT
+        modes = self.engine.decide(
+            DecisionBatch.of(sizes_bytes, site=site, kind=kind))
+        self.decisions.extend(
+            (float(sz), m) for sz, m in zip(sizes_bytes, modes))
+        return modes
+
+    def update_predicted(self, sizes_bytes) -> None:
+        """Self-feed the last-decided batch with the cost model (dry-run
+        path, where no wall-clock exists)."""
+        modes = self.engine.last_modes
+        if modes is None:
+            return
+        perfs = [self.cost_model.predict(int(sz), m)
+                 for sz, m in zip(sizes_bytes, modes)]
+        self.engine.bus.publish_flow_arrays(
+            [p.latency_cycles / 1e3 for p in perfs],  # cycles->us @1GHz
+            [p.stall_cycles_per_flit for p in perfs],
+            source="model")
+
+    # ----------------------------------------------------------- scalar API
     def select(self, size_bytes: int, *, alltoall: bool = False
                ) -> CollectiveMode:
-        mode = self.router.select(size_bytes, alltoall=alltoall)
+        kind = KIND_ALLTOALL if alltoall else KIND_PT2PT
+        mode = self.engine.decide(
+            DecisionBatch.single(size_bytes, kind=kind))[0]
         self.decisions.append((size_bytes, mode))
         return mode
 
     def observe(self, latency_cycles: float, stalls_per_flit: float):
-        self.router.observe(latency_cycles, stalls_per_flit)
+        self.engine.bus.publish(
+            self.engine.bus.from_mode_performance(ModePerformance(
+                latency_cycles, stalls_per_flit), source="nic"))
 
     def observe_predicted(self, size_bytes: int):
         """Self-feed with the cost model (used in the dry-run, where no
         wall-clock exists): predicted (L, s) for the mode just used."""
-        mode = self.router._pending_mode
-        if mode is None:
+        modes = self.engine.last_modes
+        if modes is None or len(modes) == 0:
             return
-        perf = self.cost_model.predict(size_bytes, mode)
-        self.router.observe(perf.latency_cycles, perf.stall_cycles_per_flit)
+        perf = self.cost_model.predict(size_bytes, modes[-1])
+        self.observe(perf.latency_cycles, perf.stall_cycles_per_flit)
 
     def traffic_fraction_direct(self) -> float:
-        return self.router.traffic_fraction(CollectiveMode.DIRECT)
+        return self.engine.traffic_fraction(CollectiveMode.DIRECT)

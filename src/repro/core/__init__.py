@@ -24,8 +24,17 @@ from repro.core.perf_model import (
 )
 from repro.core.counters import NICCounters, CounterWindow, CounterBackend
 from repro.core.noise import qcd, iqr, NoiseReport, estimate_noise
-from repro.core.app_aware import AppAwareRouter, RouterConfig
 from repro.core.calibration import ScalingFactors, calibrate_scaling_factors
+
+
+def __getattr__(name):
+    # Lazy: the deprecated app_aware shim pulls repro.policy, which pulls
+    # repro.core.perf_model — an eager import here would make
+    # `import repro.policy` (as the first repro import) a circular error.
+    if name in ("AppAwareRouter", "RouterConfig"):
+        from repro.core import app_aware
+        return getattr(app_aware, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "RoutingMode", "ARIES_MODES", "ADAPTIVE_MODES",

@@ -1,150 +1,128 @@
-"""Algorithm 1 — application-aware routing selection (paper §4.2/§4.3).
+"""DEPRECATED shim — Algorithm 1 now lives in `repro.policy.app_aware`.
 
-Before each message is sent, `AppAwareRouter.select(msg_size)` returns the
-routing mode to use.  After the message is sent, the caller feeds back the
-NIC counters observed for that send via `observe(L, s)`.
+`AppAwareRouter` keeps the seed's scalar select/observe API working by
+delegating to a single-call-site `AppAwarePolicy` in "message"
+granularity, which is decision-for-decision identical to the original
+implementation (tests/test_policy.py proves it on recorded traces).
 
-Faithful details reproduced from the paper:
-  * the application starts in ADAPTIVE (the Aries default);
-  * for alltoall call sites, "default" means INCREASINGLY MINIMAL BIAS
-    (ADAPTIVE_1), matching MPICH_GNI_A2A_ROUTING_MODE;
-  * decision rule Eq. (4):  switch to HIGH BIAS iff
-        f < (L_ad - L_bs)/(s_bs - s_ad) * (p+512)/1024
-    and the dual inequality to switch back;
-  * (L, s) for the *other* mode are estimated by scaling factors λ, σ when
-    the stored sample is older than `max_sample_age` selector invocations;
-  * a cumulative-size gate: the decision logic runs only once at least
-    `cumulative_threshold_bytes` (4 KiB) of traffic has accumulated since
-    the last decision; below the gate, messages are sent with HIGH BIAS
-    (small messages are latency-bound and HIGH BIAS has lower latency);
-  * counters are read after the send so the decision never delays the
-    message (the router is strictly one message behind, as in the paper).
+New code should use:
 
-The router is *network-agnostic*: modes are opaque labels `mode_a` (the
-spread/adaptive schedule) and `mode_b` (the minimal/low-latency schedule),
-so the same class arbitrates Aries routing modes in the Dragonfly simulator
-and DIRECT-vs-HIERARCHICAL collective schedules on the TPU mesh
-(repro/collectives/selector.py).
+    from repro.policy import AppAwareConfig, AppAwarePolicy, PolicyEngine
+
+`RouterConfig` is an alias of `repro.policy.AppAwareConfig` (same fields,
+same defaults).
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import warnings
 from typing import Hashable, Optional
 
-from repro.core.perf_model import (flit_threshold, flits_and_packets,
-                                   transmission_cycles_eq2)
-from repro.core.strategies import ModePerformance, RoutingMode
+# NOTE: repro.policy imports are deferred — policy.app_aware pulls
+# repro.core.perf_model, which runs repro.core.__init__, which imports
+# this module; an eager import here would make `import repro.policy`
+# (before any repro.core import) fail with a circular-import error.
 
 
-@dataclass(frozen=True)
-class RouterConfig:
-    mode_a: Hashable = RoutingMode.ADAPTIVE_0      # "Default"/spread schedule
-    mode_b: Hashable = RoutingMode.ADAPTIVE_3      # high-bias/minimal schedule
-    #: default mode_a replacement for alltoall call sites (paper §4.2 end).
-    mode_a_alltoall: Hashable = RoutingMode.ADAPTIVE_1
-    cumulative_threshold_bytes: int = 4 * 1024      # experimentally 4 KiB
-    max_sample_age: int = 16                        # "too old" horizon
-    #: λ, σ — scaling factors mapping mode_a's (L, s) to a mode_b estimate;
-    #: medians over microbenchmark sweeps (core/calibration.py).
-    lambda_latency: float = 0.8
-    sigma_stalls: float = 1.6
-    is_put: bool = True
+def __getattr__(name):
+    # legacy alias — the config moved to repro.policy (fields unchanged)
+    if name in ("RouterConfig", "AppAwareConfig"):
+        from repro.policy.app_aware import AppAwareConfig
+        return AppAwareConfig
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-@dataclass
 class AppAwareRouter:
-    config: RouterConfig = field(default_factory=RouterConfig)
-    current: Hashable = None
-    samples: dict = field(default_factory=dict)  # mode -> ModePerformance
-    cumulative_bytes: int = 0
-    sent_bytes_by_mode: dict = field(default_factory=dict)
-    decisions: int = 0
-    _pending_mode: Optional[Hashable] = None
+    """Deprecated scalar front-end over `repro.policy.AppAwarePolicy`.
 
-    def __post_init__(self) -> None:
-        if self.current is None:
-            self.current = self.config.mode_a  # start ADAPTIVE (paper §4.2)
+    Every attribute of the seed class (`current`, `samples`,
+    `cumulative_bytes`, `sent_bytes_by_mode`, `decisions`,
+    `_pending_mode`) is proxied to the underlying per-site Algorithm-1
+    automaton, so existing callers and tests observe identical state.
+    """
 
-    # ----------------------------------------------------------------- select
-    def select(self, msg_size_bytes: int, *, alltoall: bool = False) -> Hashable:
-        """selectRouting(msgSize) — Algorithm 1."""
-        cfg = self.config
-        mode_a = cfg.mode_a_alltoall if alltoall else cfg.mode_a
-        self.cumulative_bytes += msg_size_bytes
+    def __init__(self, config=None, current: Hashable = None, *,
+                 policy=None):
+        from repro.policy.app_aware import AppAwareConfig, AppAwarePolicy
 
-        if self.cumulative_bytes < cfg.cumulative_threshold_bytes:
-            # Below the gate: latency-bound regime, always minimal-biased.
-            chosen = cfg.mode_b
-        else:
-            self.cumulative_bytes = 0
-            self.decisions += 1
-            chosen = self._decide(msg_size_bytes, mode_a)
-            self.current = chosen
+        warnings.warn(
+            "AppAwareRouter is deprecated; use repro.policy.AppAwarePolicy "
+            "or repro.policy.PolicyEngine (see docs/policy_api.md)",
+            DeprecationWarning, stacklevel=2)
+        self.config = config or AppAwareConfig()
+        self.policy = policy or AppAwarePolicy(self.config,
+                                               granularity="message")
+        if current is not None:
+            self._site.current = current
 
-        self._pending_mode = chosen
-        self.sent_bytes_by_mode[chosen] = (
-            self.sent_bytes_by_mode.get(chosen, 0) + msg_size_bytes)
-        return chosen
+    # -------------------------------------------------------- state proxies
+    @property
+    def _site(self):
+        return self.policy.site("default")
 
-    def _decide(self, msg_size_bytes: int, mode_a: Hashable) -> Hashable:
-        cfg = self.config
-        f, p = flits_and_packets(msg_size_bytes, cfg.is_put)
+    @property
+    def current(self) -> Hashable:
+        return self._site.current
 
-        if self.current == cfg.mode_b:
-            # Dual branch: currently HIGH BIAS, maybe switch back to mode_a.
-            perf_b = self.samples.get(cfg.mode_b)
-            if perf_b is None:
-                return cfg.mode_b  # nothing observed yet, keep going
-            perf_a = self._estimate_other(
-                perf_b, 1.0 / max(cfg.lambda_latency, 1e-9),
-                1.0 / max(cfg.sigma_stalls, 1e-9), mode_a)
-        else:
-            # Currently mode_a (ADAPTIVE / INCR-MINIMAL for alltoall).
-            perf_a = self.samples.get(self.current) \
-                or self.samples.get(mode_a)
-            if perf_a is None:
-                return mode_a
-            perf_b = self._estimate_other(
-                perf_a, cfg.lambda_latency, cfg.sigma_stalls, cfg.mode_b)
-        # Eq.(3): compare the Eq.(2) predictions directly (Eq.(4)'s flit
-        # threshold is the rearrangement, valid only for s_b > s_a — the
-        # direct form is equivalent there and correct in the corners).
-        t_a = transmission_cycles_eq2(
-            perf_a.latency_cycles, perf_a.stall_cycles_per_flit, f, p)
-        t_b = transmission_cycles_eq2(
-            perf_b.latency_cycles, perf_b.stall_cycles_per_flit, f, p)
-        return cfg.mode_b if t_b < t_a else mode_a
+    @current.setter
+    def current(self, value: Hashable) -> None:
+        self._site.current = value
 
-    def _estimate_other(self, known: ModePerformance, lam: float, sig: float,
-                        other_mode: Hashable) -> ModePerformance:
-        """Return the stored sample for `other_mode` unless it is too old,
-        in which case scale the known mode's sample by (λ, σ) — paper §4.2."""
-        stored = self.samples.get(other_mode)
-        if stored is not None and stored.age <= self.config.max_sample_age:
-            return stored
-        return ModePerformance(
-            latency_cycles=known.latency_cycles * lam,
-            stall_cycles_per_flit=known.stall_cycles_per_flit * sig,
-        )
+    @property
+    def samples(self) -> dict:
+        return self._site.samples
 
-    # ---------------------------------------------------------------- observe
+    @samples.setter
+    def samples(self, value: dict) -> None:
+        self._site.samples = value
+
+    @property
+    def cumulative_bytes(self) -> int:
+        return self._site.cumulative_bytes
+
+    @cumulative_bytes.setter
+    def cumulative_bytes(self, value: int) -> None:
+        self._site.cumulative_bytes = value
+
+    @property
+    def decisions(self) -> int:
+        return self._site.decisions
+
+    @property
+    def sent_bytes_by_mode(self) -> dict:
+        return self._site.ledger.sent
+
+    @property
+    def gated_bytes_by_mode(self) -> dict:
+        """Bytes the 4 KiB gate forced to mode_b without a decision
+        (tracked separately — see ISSUE satellite / Fig. 8/9 semantics)."""
+        return self._site.ledger.gated
+
+    @property
+    def decided_bytes_by_mode(self) -> dict:
+        """Bytes routed by actual Algorithm-1 decisions."""
+        return self._site.ledger.decided
+
+    @property
+    def _pending_mode(self) -> Optional[Hashable]:
+        return self._site._pending_mode
+
+    # ------------------------------------------------------------ legacy API
+    def select(self, msg_size_bytes: int, *, alltoall: bool = False
+               ) -> Hashable:
+        """selectRouting(msgSize) — Algorithm 1 (delegated)."""
+        return self._site.select(msg_size_bytes, alltoall=alltoall)
+
     def observe(self, latency_cycles: float, stalls_per_flit: float) -> None:
-        """Feed back the NIC counters measured for the last-sent message.
-        Called *after* the send (paper: 'Counters are read after sending the
-        message to not introduce delays in the transmission')."""
-        if self._pending_mode is None:
-            return
-        # Age every stored sample, then refresh the used mode's slot.
-        self.samples = {m: perf.aged() for m, perf in self.samples.items()}
-        self.samples[self._pending_mode] = ModePerformance(
-            latency_cycles, stalls_per_flit, age=0)
-        self._pending_mode = None
+        self._site.observe(latency_cycles, stalls_per_flit)
 
-    # ------------------------------------------------------------------ stats
-    def traffic_fraction(self, mode: Hashable) -> float:
-        """Fraction of bytes sent with `mode` (the x-axis % in Fig. 8/9)."""
-        total = sum(self.sent_bytes_by_mode.values())
-        if total == 0:
-            return 0.0
-        return self.sent_bytes_by_mode.get(mode, 0) / total
+    def traffic_fraction(self, mode: Hashable, *,
+                         include_gated: bool = True) -> float:
+        """Fraction of bytes sent with `mode` (the x-axis % in Fig. 8/9).
+        include_gated=False excludes gate-forced bytes, counting only
+        decision-routed traffic."""
+        return self._site.traffic_fraction(mode,
+                                           include_gated=include_gated)
+
+    def gated_fraction(self) -> float:
+        return self._site.ledger.gated_fraction()

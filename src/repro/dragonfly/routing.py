@@ -42,36 +42,66 @@ class RoutingPolicy:
 
     @property
     def bias_s(self) -> float:
-        b = self.mode.minimal_bias
-        if self.mode is RoutingMode.ADAPTIVE_1:
-            # Increasingly-minimal: bias ramps 0 -> terminal along the path;
-            # in the fluid model we charge the path-average (half terminal).
-            return b * 0.5 * self.bias_unit_s
-        if np.isinf(b):
-            return b
-        return b * self.bias_unit_s
+        return mode_bias_s(self.mode, self.bias_unit_s)
+
+
+def mode_bias_s(mode: RoutingMode, bias_unit_s: float) -> float:
+    """Seconds of minimal bias for one mode.  Deterministic modes return
+    raw ±inf (never scaled — inf * unit would be inf anyway, but the raw
+    value is the sentinel score_candidates branches on)."""
+    b = mode.minimal_bias
+    if mode is RoutingMode.ADAPTIVE_1:
+        # Increasingly-minimal: bias ramps 0 -> terminal along the path;
+        # in the fluid model we charge the path-average (half terminal).
+        return b * 0.5 * bias_unit_s
+    if np.isinf(b):
+        return b
+    return b * bias_unit_s
 
 
 def score_candidates(link_ids: np.ndarray, est_queue_s: np.ndarray,
-                     is_nonmin: np.ndarray,
-                     policy: RoutingPolicy) -> np.ndarray:
+                     is_nonmin: np.ndarray, policy: RoutingPolicy,
+                     modes: np.ndarray | None = None) -> np.ndarray:
     """Predicted-delay score per candidate (seconds; lower is better).
 
     link_ids:    [n, ncand, max_hops] PAD-padded link ids
     est_queue_s: [n_links] estimated (stale/noisy) seconds-to-drain
+    modes:       optional [n] object array of per-flow RoutingModes; when
+                 given, each flow is biased by its own mode (the
+                 PolicyEngine path: one batched call per phase, mixed
+                 modes welcome).  Without it, policy.mode biases all rows.
     """
     valid = link_ids != PAD
     safe = np.where(valid, link_ids, 0)
     q = est_queue_s[safe] * valid        # [n, ncand, hops]
     hops = valid.sum(axis=-1)            # [n, ncand]
     score = q.sum(axis=-1) + policy.hop_latency_s * hops
-    bias = policy.bias_s
-    if np.isposinf(bias):                # deterministic minimal
-        score = np.where(is_nonmin[None, :], np.inf, score)
-    elif np.isneginf(bias):              # deterministic non-minimal
-        score = np.where(is_nonmin[None, :], score, np.inf)
-    else:
-        score = score + np.where(is_nonmin[None, :], bias, 0.0)
+    if modes is None:
+        bias = policy.bias_s
+        if np.isposinf(bias):                # deterministic minimal
+            score = np.where(is_nonmin[None, :], np.inf, score)
+        elif np.isneginf(bias):              # deterministic non-minimal
+            score = np.where(is_nonmin[None, :], score, np.inf)
+        else:
+            score = score + np.where(is_nonmin[None, :], bias, 0.0)
+        return score
+    # --- per-flow modes: one masked pass per UNIQUE mode (<= 7) ----------
+    n = score.shape[0]
+    bias_rows = np.zeros(n)
+    posinf = np.zeros(n, dtype=bool)
+    neginf = np.zeros(n, dtype=bool)
+    for mode in {m for m in modes}:
+        rows = modes == mode
+        b = mode_bias_s(mode, policy.bias_unit_s)
+        if np.isposinf(b):
+            posinf |= rows
+        elif np.isneginf(b):
+            neginf |= rows
+        else:
+            bias_rows[rows] = b
+    score = score + np.where(is_nonmin[None, :], bias_rows[:, None], 0.0)
+    score = np.where(posinf[:, None] & is_nonmin[None, :], np.inf, score)
+    score = np.where(neginf[:, None] & ~is_nonmin[None, :], np.inf, score)
     return score
 
 
@@ -99,6 +129,9 @@ def spray_weights(scores: np.ndarray, policy: RoutingPolicy,
         s = s + rng.gumbel(0.0, 1.0, size=s.shape) * scale
     s = np.where(np.isfinite(s), s, np.inf)
     smin = s.min(axis=1, keepdims=True)
+    # rows with no usable candidate (all inf): shift by 0 instead of inf
+    # so exp(-inf) cleanly zeroes them without inf-inf NaN warnings
+    smin = np.where(np.isfinite(smin), smin, 0.0)
     z = np.exp(-(s - smin) / t)
     z = np.where(np.isfinite(z), z, 0.0)
     tot = z.sum(axis=1, keepdims=True)

@@ -185,14 +185,22 @@ class DragonflySimulator:
 
     # ------------------------------------------------------------- run_phase
     def run_phase(self, src_nodes, dst_nodes, bytes_, policy: RoutingPolicy,
-                  allocation: Allocation | None = None) -> FlowResult:
-        """Simulate one phase of concurrent flows routed with `policy`."""
+                  allocation: Allocation | None = None,
+                  modes: np.ndarray | None = None) -> FlowResult:
+        """Simulate one phase of concurrent flows routed with `policy`.
+
+        `modes` (optional, [n_app] object array of RoutingModes) is the
+        PolicyEngine path: per-flow modes from one vectorized
+        engine.decide() call bias each flow individually; `policy` then
+        only supplies the calibration constants (bias_unit_s etc.)."""
         p = self.params
         topo = self.topo
         src = np.asarray(src_nodes, dtype=np.int64)
         dst = np.asarray(dst_nodes, dtype=np.int64)
         size = np.asarray(bytes_, dtype=np.float64)
         n_app = src.shape[0]
+        if modes is not None and np.shape(modes)[0] != n_app:
+            raise ValueError("modes must have one entry per app flow")
         if n_app == 0 and not (p.bg_enable and p.bg_flows_per_phase):
             return FlowResult(*(np.zeros(0),) * 5, 0.0)
 
@@ -201,6 +209,8 @@ class DragonflySimulator:
             idx = self.rng.choice(n_app, size=p.max_flows, replace=False)
             scale = n_app / p.max_flows
             src, dst, size = src[idx], dst[idx], size[idx] * scale
+            if modes is not None:
+                modes = modes[idx]
             n_app = p.max_flows
 
         bg = self._bg_flows(allocation)
@@ -240,7 +250,8 @@ class DragonflySimulator:
 
         def weights_for(extra_queue_s):
             est = est_queue_s + extra_queue_s
-            sc_app = score_candidates(links[:n_app], est, is_nonmin, policy)
+            sc_app = score_candidates(links[:n_app], est, is_nonmin, policy,
+                                      modes=modes)
             wa = spray_weights(sc_app, policy, self.rng,
                                packets=packets_all[:n_app])
             if n_all > n_app:

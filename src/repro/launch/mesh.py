@@ -8,18 +8,24 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape: tuple, axes: tuple):
+    # jax.sharding.AxisType landed after 0.4.37; Auto is the default there,
+    # so only pass axis_types when the installed jax knows it.
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,)
+                             * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 ("data","model") single pod; 2x16x16 ("pod","data","model")
     for the 512-chip two-pod configuration."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,)
-                         * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh_for(shape: tuple, axes: tuple):
     """Elastic variant: build whatever mesh the ElasticPlanner chose."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(jax.sharding.AxisType.Auto,)
-                         * len(axes))
+    return _make_mesh(tuple(shape), tuple(axes))

@@ -17,14 +17,46 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.collectives.modes import CollectiveMode
+from repro.collectives.selector import ICICostModel, MeshSpec
 from repro.configs import get_config, get_smoke_config
 from repro.data.synthetic import SyntheticLM
 from repro.models import registry as model_registry
 from repro.models.common import Family, param_count
+from repro.policy import DecisionBatch, POLICY_NAMES, make_engine
 from repro.runtime.straggler import StragglerMitigator
 from repro.train.optimizer import AdamWConfig, adamw_init
 from repro.train.train_step import TrainConfig, train_step
 from repro.ckpt.checkpoint import CheckpointManager
+
+
+def make_comm_engine(name: str, *, n_pods: int = 2, inner_chips: int = 256):
+    """PolicyEngine arbitrating DIRECT vs HIERARCHICAL grad-reduce
+    schedules for the training loop (the repro.policy path; the cost
+    model self-feeds telemetry on this single-host container, exactly
+    like the dry-run)."""
+    cost_model = ICICostModel(MeshSpec(n_pods=n_pods,
+                                       inner_chips=inner_chips))
+    # "message" granularity: every bucket row is its own Algorithm-1
+    # step (matching grad_comm.select_bucket_modes), not one decision
+    # stamped across the whole step's buckets
+    engine = make_engine(name, mode_a=CollectiveMode.HIERARCHICAL,
+                         mode_b=CollectiveMode.DIRECT,
+                         mode_a_alltoall=CollectiveMode.HIERARCHICAL,
+                         static_mode=CollectiveMode.DIRECT,
+                         granularity="message")
+    return engine, cost_model
+
+
+def decide_grad_schedule(engine, cost_model, bucket_bytes: list):
+    """One vectorized decision per step over all gradient buckets."""
+    modes = engine.decide(DecisionBatch.of(bucket_bytes, site="grad_comm"))
+    perfs = [cost_model.predict(int(sz), m)
+             for sz, m in zip(bucket_bytes, modes)]
+    engine.bus.publish_flow_arrays(
+        [p.latency_cycles / 1e3 for p in perfs],
+        [p.stall_cycles_per_flit for p in perfs], source="model")
+    return modes
 
 
 def make_batch_np(cfg, gen, *, step: int, batch: int, seed: int):
@@ -43,7 +75,8 @@ def make_batch_np(cfg, gen, *, step: int, batch: int, seed: int):
 
 def train_loop(cfg, *, steps: int, batch: int, seq: int, seed: int,
                ckpt_dir: str | None, ckpt_every: int, lr: float,
-               resume: bool = True, log_every: int = 10):
+               resume: bool = True, log_every: int = 10,
+               comm_policy: str | None = None):
     gen = SyntheticLM(vocab=cfg.vocab, seq_len=seq)
     tcfg = TrainConfig(optimizer=AdamWConfig(lr=lr, warmup_steps=max(
         steps // 20, 5), total_steps=steps))
@@ -61,11 +94,25 @@ def train_loop(cfg, *, steps: int, batch: int, seq: int, seed: int,
     step_fn = jax.jit(lambda p, o, b: train_step(p, o, b, cfg=cfg,
                                                  tcfg=tcfg))
     strag = StragglerMitigator(n_workers=1)
+    comm_engine = cost_model = None
+    bucket_bytes: list = []
+    if comm_policy:
+        from repro.train.grad_comm import GradCommConfig, bucketize
+        comm_engine, cost_model = make_comm_engine(comm_policy)
+        gcfg = GradCommConfig()
+        leaves = jax.tree_util.tree_leaves(params)
+        bucket_bytes = [
+            sum(int(np.prod(leaves[i].shape)) for i in b) * 2
+            for b in bucketize(params, gcfg.bucket_bytes)]
+        print(f"[train] comm policy '{comm_policy}': "
+              f"{len(bucket_bytes)} grad buckets/step")
     losses = []
     for step in range(start, steps):
         t0 = time.time()
         b = make_batch_np(cfg, gen, step=step, batch=batch, seed=seed)
         b = {k: jnp.asarray(v) for k, v in b.items()}
+        if comm_engine is not None:
+            decide_grad_schedule(comm_engine, cost_model, bucket_bytes)
         params, opt, metrics = step_fn(params, opt, b)
         dt = time.time() - t0
         strag.record_step({0: dt})
@@ -82,6 +129,11 @@ def train_loop(cfg, *, steps: int, batch: int, seq: int, seed: int,
         mgr.wait()
         mgr.save_async(steps, (params, opt), meta={"arch": cfg.name})
         mgr.wait()
+    if comm_engine is not None:
+        frac = comm_engine.traffic_fraction(CollectiveMode.HIERARCHICAL)
+        print(f"[train] comm policy: {comm_engine.decide_calls} engine "
+              f"calls, {comm_engine.rows_decided} bucket decisions, "
+              f"{frac * 100:.0f}% bytes hierarchical")
     return params, opt, losses
 
 
@@ -97,12 +149,14 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--comm-policy", default=None, choices=POLICY_NAMES,
+                    help="grad-reduce schedule policy (repro.policy)")
     args = ap.parse_args(argv)
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     _, _, losses = train_loop(
         cfg, steps=args.steps, batch=args.batch, seq=args.seq,
         seed=args.seed, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-        lr=args.lr)
+        lr=args.lr, comm_policy=args.comm_policy)
     first = np.mean(losses[:5])
     last = np.mean(losses[-5:])
     print(f"[train] loss {first:.4f} -> {last:.4f} "

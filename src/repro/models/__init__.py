@@ -7,7 +7,8 @@
 # stay small enough to compile for 512-device meshes on one CPU.
 
 from repro.models.common import ModelConfig, Family
-from repro.models.registry import init_params, train_forward, make_decode_state, decode_step, prefill
+from repro.models.registry import (init_params, train_forward,
+                                   make_decode_state, decode_step, prefill)
 
 __all__ = [
     "ModelConfig", "Family", "init_params", "train_forward",

@@ -1,0 +1,283 @@
+"""Algorithm 1 — application-aware selection (paper §4.2/§4.3) as a Policy.
+
+This is the canonical home of the paper's algorithm; the legacy
+`repro.core.app_aware.AppAwareRouter` is a deprecated shim over it.
+
+Faithful details reproduced from the paper (unchanged from the seed):
+  * the application starts in ADAPTIVE (the Aries default);
+  * for alltoall call sites, "default" means INCREASINGLY MINIMAL BIAS
+    (ADAPTIVE_1), matching MPICH_GNI_A2A_ROUTING_MODE;
+  * decision rule Eq. (4):  switch to HIGH BIAS iff
+        f < (L_ad - L_bs)/(s_bs - s_ad) * (p+512)/1024
+    and the dual inequality to switch back;
+  * (L, s) for the *other* mode are estimated by scaling factors λ, σ when
+    the stored sample is older than `max_sample_age` selector invocations;
+  * a cumulative-size gate: the decision logic runs only once at least
+    `cumulative_threshold_bytes` (4 KiB) of traffic has accumulated since
+    the last decision; below the gate, messages are sent with HIGH BIAS
+    (small messages are latency-bound and HIGH BIAS has lower latency);
+  * counters are read after the send so the decision never delays the
+    message (the policy is strictly one message behind, as in the paper).
+
+New relative to the seed:
+  * per-call-site state (`SiteState`) — one Algorithm-1 automaton per
+    (call-site) key, batched through a single `AppAwarePolicy.decide`;
+  * gate-forced traffic is ledgered separately from decision-routed
+    traffic, so `traffic_fraction(mode, include_gated=False)` matches
+    Fig. 8/9's '% sent via Default' semantics (gated small messages are
+    physically HIGH BIAS but are not mode_b *decisions*);
+  * two batching granularities: "message" replays the legacy per-message
+    protocol row by row (used by the shim and the equivalence tests);
+    "phase" runs one decision per (site, kind) group using the group's
+    max message size — exactly what the benchmark runner did per phase —
+    so a simulator step with thousands of flows costs one automaton step
+    and pure NumPy fills.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Hashable, Optional
+
+import numpy as np
+
+from repro.core.perf_model import flits_and_packets, transmission_cycles_eq2
+from repro.core.strategies import ModePerformance
+from repro.core.strategies import RoutingMode
+from repro.policy.types import (DecisionBatch, Feedback, KIND_ALLTOALL,
+                                TrafficLedger)
+
+
+@dataclass(frozen=True)
+class AppAwareConfig:
+    """Configuration of Algorithm 1 (the seed's RouterConfig, renamed)."""
+
+    mode_a: Hashable = RoutingMode.ADAPTIVE_0      # "Default"/spread schedule
+    mode_b: Hashable = RoutingMode.ADAPTIVE_3      # high-bias/minimal schedule
+    #: default mode_a replacement for alltoall call sites (paper §4.2 end).
+    mode_a_alltoall: Hashable = RoutingMode.ADAPTIVE_1
+    cumulative_threshold_bytes: int = 4 * 1024      # experimentally 4 KiB
+    max_sample_age: int = 16                        # "too old" horizon
+    #: λ, σ — scaling factors mapping mode_a's (L, s) to a mode_b estimate;
+    #: medians over microbenchmark sweeps (core/calibration.py).
+    lambda_latency: float = 0.8
+    sigma_stalls: float = 1.6
+    is_put: bool = True
+
+
+@dataclass
+class SiteState:
+    """One Algorithm-1 automaton: the per-call-site selection state."""
+
+    config: AppAwareConfig = field(default_factory=AppAwareConfig)
+    current: Hashable = None
+    samples: dict = field(default_factory=dict)  # mode -> ModePerformance
+    cumulative_bytes: int = 0
+    ledger: TrafficLedger = field(default_factory=TrafficLedger)
+    decisions: int = 0
+    _pending_mode: Optional[Hashable] = None
+
+    def __post_init__(self) -> None:
+        if self.current is None:
+            self.current = self.config.mode_a  # start ADAPTIVE (paper §4.2)
+
+    # ----------------------------------------------------------------- select
+    def select(self, msg_size_bytes: int, *, alltoall: bool = False
+               ) -> Hashable:
+        """selectRouting(msgSize) — Algorithm 1, one message."""
+        cfg = self.config
+        mode_a = cfg.mode_a_alltoall if alltoall else cfg.mode_a
+        self.cumulative_bytes += msg_size_bytes
+
+        gated = self.cumulative_bytes < cfg.cumulative_threshold_bytes
+        if gated:
+            # Below the gate: latency-bound regime, always minimal-biased.
+            chosen = cfg.mode_b
+        else:
+            self.cumulative_bytes = 0
+            self.decisions += 1
+            chosen = self._decide(msg_size_bytes, mode_a)
+            self.current = chosen
+
+        self._pending_mode = chosen
+        self.ledger.add(chosen, msg_size_bytes, gated=gated)
+        return chosen
+
+    def _decide(self, msg_size_bytes: int, mode_a: Hashable) -> Hashable:
+        cfg = self.config
+        f, p = flits_and_packets(msg_size_bytes, cfg.is_put)
+
+        if self.current == cfg.mode_b:
+            # Dual branch: currently HIGH BIAS, maybe switch back to mode_a.
+            perf_b = self.samples.get(cfg.mode_b)
+            if perf_b is None:
+                return cfg.mode_b  # nothing observed yet, keep going
+            perf_a = self._estimate_other(
+                perf_b, 1.0 / max(cfg.lambda_latency, 1e-9),
+                1.0 / max(cfg.sigma_stalls, 1e-9), mode_a)
+        else:
+            # Currently mode_a (ADAPTIVE / INCR-MINIMAL for alltoall).
+            perf_a = self.samples.get(self.current) \
+                or self.samples.get(mode_a)
+            if perf_a is None:
+                return mode_a
+            perf_b = self._estimate_other(
+                perf_a, cfg.lambda_latency, cfg.sigma_stalls, cfg.mode_b)
+        # Eq.(3): compare the Eq.(2) predictions directly (Eq.(4)'s flit
+        # threshold is the rearrangement, valid only for s_b > s_a — the
+        # direct form is equivalent there and correct in the corners).
+        t_a = transmission_cycles_eq2(
+            perf_a.latency_cycles, perf_a.stall_cycles_per_flit, f, p)
+        t_b = transmission_cycles_eq2(
+            perf_b.latency_cycles, perf_b.stall_cycles_per_flit, f, p)
+        return cfg.mode_b if t_b < t_a else mode_a
+
+    def _estimate_other(self, known: ModePerformance, lam: float, sig: float,
+                        other_mode: Hashable) -> ModePerformance:
+        """Return the stored sample for `other_mode` unless it is too old,
+        in which case scale the known mode's sample by (λ, σ) — paper §4.2."""
+        stored = self.samples.get(other_mode)
+        if stored is not None and stored.age <= self.config.max_sample_age:
+            return stored
+        return ModePerformance(
+            latency_cycles=known.latency_cycles * lam,
+            stall_cycles_per_flit=known.stall_cycles_per_flit * sig,
+        )
+
+    # ---------------------------------------------------------------- observe
+    def observe(self, latency_cycles: float, stalls_per_flit: float) -> None:
+        """Feed back the NIC counters measured for the last-sent message.
+        Called *after* the send (paper: 'Counters are read after sending the
+        message to not introduce delays in the transmission')."""
+        if self._pending_mode is None:
+            return
+        self.observe_for_mode(self._pending_mode, latency_cycles,
+                              stalls_per_flit)
+        self._pending_mode = None
+
+    def observe_for_mode(self, mode: Hashable, latency_cycles: float,
+                         stalls_per_flit: float) -> None:
+        """observe() with an explicit mode — used by the batched policy,
+        where several decisions may be pending at once."""
+        # Age every stored sample, then refresh the used mode's slot.
+        self.samples = {m: perf.aged() for m, perf in self.samples.items()}
+        self.samples[mode] = ModePerformance(
+            latency_cycles, stalls_per_flit, age=0)
+
+    # ------------------------------------------------------------------ stats
+    def traffic_fraction(self, mode: Hashable, *,
+                         include_gated: bool = True) -> float:
+        return self.ledger.traffic_fraction(mode,
+                                            include_gated=include_gated)
+
+
+class AppAwarePolicy:
+    """Algorithm 1 as a batched, multi-call-site Policy.
+
+    granularity:
+      * "phase"  — one automaton step per (site, kind) group per decide();
+        the group's max message size drives the gate/decision, all rows
+        get the group's mode (the paper's per-phase protocol; what the
+        benchmark runner always did).  No per-row Python work.
+      * "message" — row-by-row replay of the legacy per-message protocol;
+        decision-for-decision identical to the seed AppAwareRouter.
+    """
+
+    def __init__(self, config: AppAwareConfig | None = None, *,
+                 granularity: str = "phase"):
+        if granularity not in ("phase", "message"):
+            raise ValueError(f"unknown granularity: {granularity!r}")
+        self.config = config or AppAwareConfig()
+        self.granularity = granularity
+        self._sites: dict = {}
+        #: per-row gate mask of the last decide() (engine ledger input)
+        self.last_gated: np.ndarray | None = None
+        self._pending: list = []   # [(SiteState, rows, modes_of_rows)]
+
+    # ------------------------------------------------------------------ sites
+    def site(self, key: Hashable = "default") -> SiteState:
+        st = self._sites.get(key)
+        if st is None:
+            st = self._sites[key] = SiteState(self.config)
+        return st
+
+    # ----------------------------------------------------------------- decide
+    def decide(self, batch: DecisionBatch) -> np.ndarray:
+        n = len(batch)
+        modes = np.empty(n, dtype=object)
+        gated = np.zeros(n, dtype=bool)
+        pending = []
+        for site_key, kind, rows in batch.groups():
+            st = self.site(site_key)
+            a2a = kind == KIND_ALLTOALL
+            if self.granularity == "phase":
+                before = st.cumulative_bytes
+                msg = float(batch.msg_bytes[rows].max())
+                mode = st.select(int(msg), alltoall=a2a)
+                modes[rows] = mode
+                was_gated = before + msg \
+                    < self.config.cumulative_threshold_bytes
+                gated[rows] = was_gated
+                # select() ledgered only the gate-driving max message;
+                # account the rest of the group's bytes too so the site
+                # ledger matches the engine's traffic truth
+                rest = float(batch.msg_bytes[rows].sum()) - msg
+                if rest > 0:
+                    st.ledger.add(mode, rest, gated=was_gated)
+                row_modes = np.full(len(rows), mode, dtype=object)
+            else:
+                row_modes = np.empty(len(rows), dtype=object)
+                for j, i in enumerate(rows):
+                    before = st.cumulative_bytes
+                    size = int(batch.msg_bytes[i])
+                    row_modes[j] = modes[i] = st.select(size, alltoall=a2a)
+                    gated[i] = before + size \
+                        < self.config.cumulative_threshold_bytes
+            pending.append((st, rows, row_modes))
+        self.last_gated = gated
+        self._pending = pending
+        return modes
+
+    # ----------------------------------------------------------------- update
+    def update(self, batch: DecisionBatch, feedback: Feedback) -> None:
+        """Feed (L, s) back for the rows of the last decide().
+
+        In "phase" granularity each group collapses to one weighted-mean
+        sample (the runner's per-phase mean-counter observation); in
+        "message" granularity every row refreshes its own mode's slot in
+        row order, replaying the legacy select/observe interleave."""
+        if not self._pending:
+            return
+        if len(feedback) != len(batch):
+            raise ValueError("feedback rows must match the decided batch")
+        lat, st_, w = (feedback.latency_cycles, feedback.stalls_per_flit,
+                       feedback.weight)
+        for site_state, rows, row_modes in self._pending:
+            if self.granularity == "phase":
+                wr = w[rows]
+                tot = float(wr.sum()) or 1.0
+                site_state.observe_for_mode(
+                    row_modes[0],
+                    float((lat[rows] * wr).sum() / tot),
+                    float((st_[rows] * wr).sum() / tot))
+                site_state._pending_mode = None
+            else:
+                for j, i in enumerate(rows):
+                    site_state.observe_for_mode(row_modes[j],
+                                                float(lat[i]), float(st_[i]))
+                    site_state._pending_mode = None
+        self._pending = []
+
+    # ------------------------------------------------------------------ stats
+    def traffic_fraction(self, mode: Hashable, *,
+                         include_gated: bool = True) -> float:
+        """Aggregated over all call sites."""
+        merged = TrafficLedger()
+        for st in self._sites.values():
+            for m, b in st.ledger.sent.items():
+                merged.sent[m] = merged.sent.get(m, 0.0) + b
+            for m, b in st.ledger.gated.items():
+                merged.gated[m] = merged.gated.get(m, 0.0) + b
+            for m, b in st.ledger.decided.items():
+                merged.decided[m] = merged.decided.get(m, 0.0) + b
+        return merged.traffic_fraction(mode, include_gated=include_gated)

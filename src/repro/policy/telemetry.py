@@ -1,0 +1,99 @@
+"""TelemetryBus — one feedback pipe for every counter source.
+
+The paper's Algorithm 1 consumes a single (L, s) pair per observation;
+the repo has three producers of that pair with three different units:
+
+  * Aries NIC counters (`core/counters.py`): CounterDelta with
+    mean_latency_us and stalls_per_flit — the faithful hardware path;
+  * HLO counters (`collectives/hlo_counters.py`): the same NICCounters
+    synthesized from a compiled XLA module, read through CounterWindow;
+  * the Dragonfly simulator: per-flow latency_us / stalls_per_flit
+    arrays straight out of the fluid model (FlowResult).
+
+The bus normalizes all of them into `Feedback` records (latency in NIC
+cycles, stalls per flit) and fans them out to subscribers — typically a
+PolicyEngine, which forwards them to its Policy.  Publishing never
+blocks or reorders: counters are read *after* the send, so policies stay
+strictly one message behind, as in the paper (§4.3).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List
+
+import numpy as np
+
+from repro.core.counters import CounterDelta, CounterWindow
+from repro.core.perf_model import NIC_CLOCK_GHZ
+from repro.core.strategies import ModePerformance
+from repro.policy.types import Feedback
+
+
+def us_to_cycles(latency_us, clock_ghz: float = NIC_CLOCK_GHZ):
+    return np.asarray(latency_us, dtype=np.float64) * clock_ghz * 1e3
+
+
+@dataclass
+class TelemetryBus:
+    """Normalize heterogeneous counters into Feedback and fan out."""
+
+    clock_ghz: float = NIC_CLOCK_GHZ
+    _subscribers: List[Callable[[Feedback], None]] = field(
+        default_factory=list)
+    #: ring of recent feedback, handy for debugging/benchmark reporting
+    history: list = field(default_factory=list)
+    history_limit: int = 64
+
+    # ----------------------------------------------------------- pub/sub
+    def subscribe(self, callback: Callable[[Feedback], None]) -> None:
+        self._subscribers.append(callback)
+
+    def publish(self, feedback: Feedback) -> None:
+        self.history.append(feedback)
+        if len(self.history) > self.history_limit:
+            del self.history[: len(self.history) - self.history_limit]
+        for cb in self._subscribers:
+            cb(feedback)
+
+    # ------------------------------------------------------- normalizers
+    def from_counter_delta(self, delta: CounterDelta, *,
+                           source: str = "nic") -> Feedback:
+        """Aries/HLO NIC counters -> one aggregate (L, s) sample."""
+        return Feedback.of(
+            us_to_cycles(delta.mean_latency_us, self.clock_ghz),
+            [delta.stalls_per_flit],
+            weight=[max(float(delta.flits), 1.0)],
+            source=source)
+
+    def from_counter_window(self, window: CounterWindow, *,
+                            source: str = "nic") -> Feedback:
+        """Read a CounterWindow delta and normalize it (§3.2-safe)."""
+        return self.from_counter_delta(window.read(), source=source)
+
+    def from_flow_arrays(self, latency_us, stalls_per_flit, *,
+                         weight=None, source: str = "sim") -> Feedback:
+        """Dragonfly FlowResult observables -> per-flow Feedback rows."""
+        return Feedback.of(
+            us_to_cycles(latency_us, self.clock_ghz), stalls_per_flit,
+            weight=weight, source=source)
+
+    def from_mode_performance(self, perf: ModePerformance, *,
+                              source: str = "model") -> Feedback:
+        """Cost-model prediction -> one sample (dry-run self-feeding)."""
+        return Feedback.single(perf.latency_cycles,
+                               perf.stall_cycles_per_flit, source=source)
+
+    # ------------------------------------------------ publish shorthands
+    def publish_counter_delta(self, delta: CounterDelta, *,
+                              source: str = "nic") -> Feedback:
+        fb = self.from_counter_delta(delta, source=source)
+        self.publish(fb)
+        return fb
+
+    def publish_flow_arrays(self, latency_us, stalls_per_flit, *,
+                            weight=None, source: str = "sim") -> Feedback:
+        fb = self.from_flow_arrays(latency_us, stalls_per_flit,
+                                   weight=weight, source=source)
+        self.publish(fb)
+        return fb

@@ -5,6 +5,13 @@ above this; the per-step compute below is what the decode_* dry-run shapes
 lower): requests are padded into a fixed batch, prefilled once, then
 decoded step-by-step with greedy/temperature sampling.  `serve_step` (the
 jit'd decode) is the artifact the decode_32k / long_500k cells compile.
+
+Optional comm policy (repro.policy): multi-pod serving moves the prefill
+KV cache to the decode replicas; `ServeConfig.comm_policy` routes that
+transfer per batch through the unified PolicyEngine (DIRECT for small
+latency-bound prompt batches, HIERARCHICAL once the KV volume makes the
+pod-boundary links the bottleneck) — the same Algorithm-1 machinery the
+Dragonfly substrate uses, fed by the ICI cost model on this container.
 """
 
 from __future__ import annotations
@@ -34,6 +41,11 @@ class ServeConfig:
     batch: int = 8
     max_len: int = 1024
     eos_id: int = -1                 # -1: never stop early
+    #: repro.policy name routing the prefill->decode KV transfer
+    #: (None: no policy, single-replica serving)
+    comm_policy: Optional[str] = None
+    n_pods: int = 2
+    inner_chips: int = 256
 
 
 def make_serve_step(cfg: ModelConfig):
@@ -65,6 +77,43 @@ class ServeEngine:
         self.cfg, self.params, self.scfg = cfg, params, scfg
         self._step = make_serve_step(cfg)
         self._prefill = make_prefill(cfg)
+        self.comm_engine = self._cost_model = None
+        #: [(kv_bytes, mode)] per run() — the KV-transfer schedule log
+        self.policy_decisions: list = []
+        if scfg.comm_policy:
+            from repro.collectives.modes import CollectiveMode
+            from repro.collectives.selector import ICICostModel, MeshSpec
+            from repro.policy import make_engine
+            self._cost_model = ICICostModel(
+                MeshSpec(n_pods=scfg.n_pods, inner_chips=scfg.inner_chips))
+            self.comm_engine = make_engine(
+                scfg.comm_policy,
+                mode_a=CollectiveMode.HIERARCHICAL,
+                mode_b=CollectiveMode.DIRECT,
+                mode_a_alltoall=CollectiveMode.HIERARCHICAL,
+                static_mode=CollectiveMode.DIRECT)
+
+    def _kv_bytes(self, prompt_tokens: int) -> int:
+        """KV cache volume of one prefilled batch (bf16, all layers)."""
+        c = self.cfg
+        heads_kv = getattr(c, "n_kv_heads", None) or \
+            getattr(c, "n_heads", 1)
+        head_dim = c.d_model // max(getattr(c, "n_heads", 1), 1)
+        return int(2 * c.n_layers * heads_kv * head_dim
+                   * prompt_tokens * 2)  # K+V, bf16
+
+    def _route_kv_transfer(self, prompt_tokens: int):
+        """One engine decision for this batch's prefill->decode transfer."""
+        from repro.policy import DecisionBatch
+        nbytes = self._kv_bytes(prompt_tokens)
+        mode = self.comm_engine.decide(
+            DecisionBatch.single(nbytes, site="kv_transfer"))[0]
+        perf = self._cost_model.predict(nbytes, mode)
+        self.comm_engine.bus.publish_flow_arrays(
+            [perf.latency_cycles / 1e3], [perf.stall_cycles_per_flit],
+            source="model")
+        self.policy_decisions.append((nbytes, mode))
+        return mode
 
     def _pad_batch(self, requests: List[Request]):
         B = self.scfg.batch
@@ -86,6 +135,8 @@ class ServeEngine:
         batch = {"tokens": toks}
         if extra:
             batch.update(extra)
+        if self.comm_engine is not None:
+            self._route_kv_transfer(self.scfg.batch * toks.shape[1])
         logits, state = self._prefill(self.params, batch, state)
         tok = jnp.argmax(logits[:, -1, :self.cfg.vocab],
                          axis=-1).astype(jnp.int32)[:, None]

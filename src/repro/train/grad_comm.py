@@ -66,17 +66,16 @@ def select_bucket_modes(selector: AppAwareSelector, grads,
     """Algorithm 1 per bucket: returns [(bucket, CollectiveMode), ...].
 
     Called once per step on the host; the chosen modes parameterize the
-    shard_map reduce for each bucket."""
+    shard_map reduce for each bucket.  ONE vectorized engine call decides
+    every bucket of the step (repro.policy batch path), then the cost
+    model self-feeds the batch (dry-run telemetry)."""
     buckets = bucketize(grads, cfg.bucket_bytes)
     leaves = jax.tree_util.tree_leaves(grads)
-    out = []
-    for b in buckets:
-        nbytes = sum(int(np.prod(leaves[i].shape)) for i in b) \
-            * (2 if cfg.compress else 4)
-        mode = selector.select(nbytes)
-        selector.observe_predicted(nbytes)
-        out.append((b, mode))
-    return out
+    sizes = [sum(int(np.prod(leaves[i].shape)) for i in b)
+             * (2 if cfg.compress else 4) for b in buckets]
+    modes = selector.decide_batch(sizes, site="grad_comm")
+    selector.update_predicted(sizes)
+    return list(zip(buckets, modes))
 
 
 def reduce_bucketed(grads, mesh, selector: AppAwareSelector,

@@ -1,0 +1,102 @@
+"""Minimal deterministic fallback for `hypothesis` (used when the real
+package is not installed in the container).
+
+Implements just the surface this test suite uses — ``given``,
+``strategies.integers/floats/lists`` and the ``settings`` profile API —
+with seeded random sampling plus boundary examples, so property tests
+still exercise edge values.  The real hypothesis, when present, is always
+preferred (see conftest.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+
+class settings:  # noqa: N801 - mirrors hypothesis' lowercase class
+    _profiles: dict = {}
+    max_examples: int = 25
+
+    def __init__(self, max_examples: int | None = None, deadline=None, **kw):
+        self._max = max_examples
+
+    def __call__(self, fn):
+        fn._stub_max_examples = self._max
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, max_examples: int = 25,
+                         deadline=None, **kw) -> None:
+        cls._profiles[name] = max_examples
+
+    @classmethod
+    def load_profile(cls, name: str) -> None:
+        cls.max_examples = cls._profiles.get(name, 25)
+
+
+class SearchStrategy:
+    def __init__(self, draw, boundary=()):
+        self._draw = draw
+        #: deterministic edge examples tried before random sampling
+        self.boundary = list(boundary)
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+class strategies:  # noqa: N801 - used as `from ... import strategies as st`
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> SearchStrategy:
+        return SearchStrategy(lambda r: r.randint(min_value, max_value),
+                              boundary=[min_value, max_value])
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **kw) -> SearchStrategy:
+        return SearchStrategy(lambda r: r.uniform(min_value, max_value),
+                              boundary=[min_value, max_value])
+
+    @staticmethod
+    def lists(elements: SearchStrategy, min_size: int = 0,
+              max_size: int = 10) -> SearchStrategy:
+        def draw(r):
+            n = r.randint(min_size, max_size)
+            return [elements.draw(r) for _ in range(n)]
+        return SearchStrategy(
+            draw, boundary=[[b] * max(min_size, 1) for b in elements.boundary])
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rnd = random.Random(0xD5A607)
+            n = getattr(fn, "_stub_max_examples", None) or settings.max_examples
+            strats = list(arg_strategies) + list(kw_strategies.values())
+            names = list(kw_strategies)
+            # boundary pass: every strategy at each of its edge values
+            n_edges = max((len(s.boundary) for s in strats), default=0)
+            for i in range(n_edges):
+                pos, kw = [], {}
+                for j, s in enumerate(arg_strategies):
+                    b = s.boundary or [s.draw(rnd)]
+                    pos.append(b[i % len(b)])
+                for name in names:
+                    s = kw_strategies[name]
+                    b = s.boundary or [s.draw(rnd)]
+                    kw[name] = b[i % len(b)]
+                fn(*args, *pos, **kwargs, **kw)
+            # random pass
+            for _ in range(max(n - n_edges, 1)):
+                pos = [s.draw(rnd) for s in arg_strategies]
+                kw = {name: kw_strategies[name].draw(rnd) for name in names}
+                fn(*args, *pos, **kwargs, **kw)
+        # pytest must not treat the strategy params as fixtures: hide the
+        # original signature (hypothesis does the equivalent internally).
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        wrapper.hypothesis_stub = True
+        return wrapper
+    return deco

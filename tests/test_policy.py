@@ -1,0 +1,344 @@
+"""repro.policy — unified policy engine tests.
+
+Includes the acceptance-criterion trace test: AppAwarePolicy driven one
+message at a time (batch=1, "message" granularity) must be decision-for-
+decision identical to the SEED AppAwareRouter on recorded traces.  The
+seed implementation is frozen below as `_SeedRouter` (copied verbatim
+from the pre-refactor repro/core/app_aware.py) so the equivalence is
+anchored against the original, not against the shim that now delegates
+to the very code under test.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.app_aware import AppAwareRouter, RouterConfig
+from repro.core.perf_model import flits_and_packets, transmission_cycles_eq2
+from repro.core.strategies import ModePerformance, RoutingMode
+from repro.policy import (AppAwareConfig, AppAwarePolicy, DecisionBatch,
+                          EpsilonGreedyPolicy, Feedback, KIND_ALLTOALL,
+                          KIND_PT2PT, PolicyEngine, StaticPolicy,
+                          TelemetryBus, TrafficLedger, make_engine)
+
+A, B = RoutingMode.ADAPTIVE_0, RoutingMode.ADAPTIVE_3
+A1 = RoutingMode.ADAPTIVE_1
+
+
+# --------------------------------------------------------------------------
+# Frozen seed implementation (reference for the equivalence property).
+# --------------------------------------------------------------------------
+class _SeedRouter:
+    def __init__(self, config=None):
+        self.config = config or AppAwareConfig()
+        self.current = self.config.mode_a
+        self.samples = {}
+        self.cumulative_bytes = 0
+        self.sent_bytes_by_mode = {}
+        self.decisions = 0
+        self._pending_mode = None
+
+    def select(self, msg_size_bytes, *, alltoall=False):
+        cfg = self.config
+        mode_a = cfg.mode_a_alltoall if alltoall else cfg.mode_a
+        self.cumulative_bytes += msg_size_bytes
+        if self.cumulative_bytes < cfg.cumulative_threshold_bytes:
+            chosen = cfg.mode_b
+        else:
+            self.cumulative_bytes = 0
+            self.decisions += 1
+            chosen = self._decide(msg_size_bytes, mode_a)
+            self.current = chosen
+        self._pending_mode = chosen
+        self.sent_bytes_by_mode[chosen] = (
+            self.sent_bytes_by_mode.get(chosen, 0) + msg_size_bytes)
+        return chosen
+
+    def _decide(self, msg_size_bytes, mode_a):
+        cfg = self.config
+        f, p = flits_and_packets(msg_size_bytes, cfg.is_put)
+        if self.current == cfg.mode_b:
+            perf_b = self.samples.get(cfg.mode_b)
+            if perf_b is None:
+                return cfg.mode_b
+            perf_a = self._estimate_other(
+                perf_b, 1.0 / max(cfg.lambda_latency, 1e-9),
+                1.0 / max(cfg.sigma_stalls, 1e-9), mode_a)
+        else:
+            perf_a = self.samples.get(self.current) \
+                or self.samples.get(mode_a)
+            if perf_a is None:
+                return mode_a
+            perf_b = self._estimate_other(
+                perf_a, cfg.lambda_latency, cfg.sigma_stalls, cfg.mode_b)
+        t_a = transmission_cycles_eq2(
+            perf_a.latency_cycles, perf_a.stall_cycles_per_flit, f, p)
+        t_b = transmission_cycles_eq2(
+            perf_b.latency_cycles, perf_b.stall_cycles_per_flit, f, p)
+        return cfg.mode_b if t_b < t_a else mode_a
+
+    def _estimate_other(self, known, lam, sig, other_mode):
+        stored = self.samples.get(other_mode)
+        if stored is not None and stored.age <= self.config.max_sample_age:
+            return stored
+        return ModePerformance(
+            latency_cycles=known.latency_cycles * lam,
+            stall_cycles_per_flit=known.stall_cycles_per_flit * sig)
+
+    def observe(self, latency_cycles, stalls_per_flit):
+        if self._pending_mode is None:
+            return
+        self.samples = {m: perf.aged() for m, perf in self.samples.items()}
+        self.samples[self._pending_mode] = ModePerformance(
+            latency_cycles, stalls_per_flit, age=0)
+        self._pending_mode = None
+
+
+def _trace_from(seed: int, n: int):
+    """A recorded trace: (size, alltoall, L, s) tuples."""
+    rng = np.random.default_rng(seed)
+    sizes = (2.0 ** rng.uniform(6, 24, size=n)).astype(int)
+    a2a = rng.random(n) < 0.3
+    lat = rng.uniform(100, 5e4, size=n)
+    stalls = rng.uniform(0, 5, size=n)
+    return list(zip(sizes, a2a, lat, stalls))
+
+
+@given(seed=st.integers(0, 10_000))
+def test_appaware_policy_batch1_matches_seed_router_on_trace(seed):
+    """Acceptance criterion: batch-of-1 AppAwarePolicy == seed Algorithm 1,
+    decision for decision, on a recorded trace."""
+    ref = _SeedRouter()
+    pol = AppAwarePolicy(AppAwareConfig(), granularity="message")
+    eng = PolicyEngine(pol)
+    for size, a2a, lat, stalls in _trace_from(seed, 40):
+        kind = KIND_ALLTOALL if a2a else KIND_PT2PT
+        got = eng.decide(DecisionBatch.single(size, kind=kind))[0]
+        want = ref.select(int(size), alltoall=bool(a2a))
+        assert got is want
+        ref.observe(lat, stalls)
+        eng.update(Feedback.single(lat, stalls))
+    site = pol.site("default")
+    assert site.decisions == ref.decisions
+    assert site.current is ref.current
+    assert site.ledger.sent == pytest.approx(ref.sent_bytes_by_mode)
+
+
+@given(seed=st.integers(0, 10_000))
+def test_legacy_shim_matches_seed_router_on_trace(seed):
+    """The deprecated AppAwareRouter shim replays the seed exactly too."""
+    ref = _SeedRouter()
+    shim = AppAwareRouter(RouterConfig())
+    for size, a2a, lat, stalls in _trace_from(seed, 40):
+        assert shim.select(int(size), alltoall=bool(a2a)) \
+            is ref.select(int(size), alltoall=bool(a2a))
+        ref.observe(lat, stalls)
+        shim.observe(lat, stalls)
+    assert shim.decisions == ref.decisions
+    assert shim.current is ref.current
+
+
+# --------------------------------------------------------------------------
+# Vectorized engine behaviour.
+# --------------------------------------------------------------------------
+def test_engine_phase_granularity_one_automaton_step_per_group():
+    eng = make_engine("app_aware")
+    n = 5000
+    sizes = np.full(n, 1 << 20)
+    eng.decide(DecisionBatch.of(sizes, site="s1"))
+    pol = eng.policy
+    assert pol.site("s1").decisions == 1       # ONE step for 5000 rows
+    assert eng.decide_calls == 1 and eng.rows_decided == n
+
+    # mixed sites in one batch: one step each, rows routed per site
+    site = np.empty(4, dtype=object)
+    site[:] = ["a", "b", "a", "b"]
+    modes = eng.decide(DecisionBatch(np.full(4, 1 << 20), site,
+                                     np.array(["pt2pt"] * 4, dtype=object)))
+    assert len(modes) == 4
+    assert pol.site("a").decisions == 1
+    assert pol.site("b").decisions == 1
+
+
+def test_engine_decide_returns_row_aligned_modes():
+    eng = make_engine("static", static_mode=B)
+    modes = eng.decide(DecisionBatch.of([1, 2, 3]))
+    assert modes.shape == (3,) and all(m is B for m in modes)
+
+
+def test_engine_broadcasts_single_sample_feedback():
+    eng = make_engine("app_aware")
+    eng.decide(DecisionBatch.of(np.full(8, 1 << 20), site="x"))
+    # a counter-window read produces ONE aggregate sample for the batch
+    eng.update(Feedback.single(1234.0, 0.5))
+    site = eng.policy.site("x")
+    assert len(site.samples) == 1
+    (perf,) = site.samples.values()
+    assert perf.latency_cycles == pytest.approx(1234.0)
+
+
+def test_alltoall_kind_routes_to_increasingly_minimal():
+    eng = make_engine("app_aware")
+    eng.decide(DecisionBatch.of([1 << 20], site="a2a", kind=KIND_ALLTOALL))
+    eng.update(Feedback.single(5000.0, 2.0))
+    modes = eng.decide(DecisionBatch.of([64 << 20], site="a2a",
+                                        kind=KIND_ALLTOALL))
+    assert modes[0] is A1   # paper §4.2: alltoall default is INCR-MINIMAL
+
+
+# --------------------------------------------------------------------------
+# Satellite regression: gate-forced traffic is ledgered separately.
+# --------------------------------------------------------------------------
+def test_gated_bytes_tracked_separately_from_decisions():
+    r = AppAwareRouter(RouterConfig(cumulative_threshold_bytes=4096))
+    r.select(100)                       # below the gate -> forced mode_b
+    # physical accounting unchanged (the bytes really went out mode_b)
+    assert r.sent_bytes_by_mode == {B: 100}
+    assert r.traffic_fraction(B) == pytest.approx(1.0)
+    # ...but it was no decision: the gated ledger holds it instead
+    assert r.gated_bytes_by_mode == {B: 100}
+    assert r.decided_bytes_by_mode == {}
+    assert r.traffic_fraction(B, include_gated=False) == 0.0
+    assert r.gated_fraction() == pytest.approx(1.0)
+    # `current` is untouched by the gate (the original bug's symptom)
+    assert r.current is A
+
+    # a real decision lands in `decided`, not `gated`
+    r.observe(1000.0, 0.1)
+    r.select(8192)
+    assert sum(r.decided_bytes_by_mode.values()) == 8192
+    assert sum(r.gated_bytes_by_mode.values()) == 100
+    assert 0.0 < r.gated_fraction() < 1.0
+
+
+def test_traffic_ledger_batch_accounting():
+    led = TrafficLedger()
+    modes = np.empty(4, dtype=object)
+    modes[:] = [A, B, B, A]
+    led.add_batch(modes, np.array([10.0, 20.0, 30.0, 40.0]),
+                  gated=np.array([False, True, False, False]))
+    assert led.sent == {A: 50.0, B: 50.0}
+    assert led.gated == {B: 20.0}
+    assert led.decided == {A: 50.0, B: 30.0}
+    assert led.traffic_fraction(B) == pytest.approx(0.5)
+    assert led.traffic_fraction(B, include_gated=False) \
+        == pytest.approx(30.0 / 80.0)
+    assert led.gated_fraction() == pytest.approx(0.2)
+
+
+# --------------------------------------------------------------------------
+# Baseline policies.
+# --------------------------------------------------------------------------
+def test_static_policy_ignores_feedback():
+    pol = StaticPolicy(A)
+    b = DecisionBatch.of([1, 2, 3])
+    modes = pol.decide(b)
+    pol.update(b, Feedback.of([1.0] * 3, [0.0] * 3))
+    assert all(m is A for m in modes)
+
+
+def test_eps_greedy_exploits_cheaper_arm():
+    pol = EpsilonGreedyPolicy(mode_a=A, mode_b=B, epsilon=0.0, seed=0)
+    eng = PolicyEngine(pol)
+    # arm A: low cost; arm B: high cost (after both are bootstrapped)
+    costs = {A: (100.0, 0.1), B: (100.0, 10.0)}
+    for _ in range(4):
+        modes = eng.decide(DecisionBatch.of(np.full(16, 1 << 16), site="s"))
+        lat = np.array([costs[m][0] for m in modes])
+        stl = np.array([costs[m][1] for m in modes])
+        eng.update(Feedback.of(lat, stl))
+    modes = eng.decide(DecisionBatch.of(np.full(64, 1 << 16), site="s"))
+    assert all(m is A for m in modes)
+
+
+def test_eps_greedy_explores_both_arms():
+    pol = EpsilonGreedyPolicy(mode_a=A, mode_b=B, epsilon=1.0, seed=3)
+    modes = pol.decide(DecisionBatch.of(np.full(256, 1 << 16), site="s"))
+    assert {m for m in modes} == {A, B}
+
+
+# --------------------------------------------------------------------------
+# TelemetryBus normalization.
+# --------------------------------------------------------------------------
+def test_bus_normalizes_counter_delta_to_cycles():
+    from repro.core.counters import CounterDelta
+    bus = TelemetryBus(clock_ghz=1.0)
+    delta = CounterDelta(flits=500, stalled_cycles=250, packets=100,
+                         latency_us_total=1000.0, window_s=1.0)
+    fb = bus.from_counter_delta(delta)
+    assert fb.latency_cycles[0] == pytest.approx(10.0 * 1e3)  # 10us @1GHz
+    assert fb.stalls_per_flit[0] == pytest.approx(0.5)
+    assert fb.source == "nic"
+
+
+def test_bus_fans_out_to_subscribers():
+    bus = TelemetryBus()
+    got = []
+    bus.subscribe(got.append)
+    bus.subscribe(got.append)
+    fb = bus.publish_flow_arrays([1.0], [0.0])
+    assert got == [fb, fb]
+    assert bus.history[-1] is fb
+
+
+# --------------------------------------------------------------------------
+# End-to-end: engine drives the Dragonfly simulator, one call per phase.
+# --------------------------------------------------------------------------
+def test_run_iteration_engine_one_decide_per_phase():
+    from repro.dragonfly import (DragonflySimulator, DragonflyTopology,
+                                 SimParams, TopologyParams)
+    from repro.dragonfly.topology import make_allocation
+    from repro.dragonfly.traffic import (PATTERN_KIND, PATTERNS,
+                                         engine_for_arm,
+                                         run_iteration_engine)
+    topo = DragonflyTopology(TopologyParams(n_groups=8))
+    sim = DragonflySimulator(topo, SimParams(seed=0))
+    al = make_allocation(topo, 16, spread="groups:4", seed=0)
+    phases = PATTERNS["alltoall"](16, size_per_pair=65536)
+    eng = engine_for_arm("app_aware", sim)
+    res = run_iteration_engine(sim, al, phases, eng, site="a2a",
+                               kind=PATTERN_KIND["alltoall"])
+    assert eng.decide_calls == len(phases)      # ONE engine call per phase
+    assert eng.rows_decided == sum(p[0].size for p in phases)
+    assert res.time_us > 0
+    assert sum(res.mode_bytes.values()) == pytest.approx(
+        sum(float(p[2].sum()) for p in phases))
+
+
+def test_simulator_accepts_mixed_per_flow_modes():
+    from repro.dragonfly import (DragonflySimulator, DragonflyTopology,
+                                 SimParams, TopologyParams)
+    from repro.dragonfly.routing import RoutingPolicy
+    from repro.dragonfly.topology import make_allocation
+    topo = DragonflyTopology(TopologyParams(n_groups=8))
+    sim = DragonflySimulator(topo, SimParams(seed=0, bg_enable=False))
+    al = make_allocation(topo, 8, spread="groups:4", seed=0)
+    nodes = np.asarray(al.nodes)
+    src = nodes[np.arange(0, 8)]
+    dst = nodes[(np.arange(0, 8) + 1) % 8]
+    modes = np.empty(8, dtype=object)
+    modes[:] = [A, B, RoutingMode.MIN_HASH, RoutingMode.NMIN_HASH] * 2
+    res = sim.run_phase(src, dst, np.full(8, 65536.0),
+                        RoutingPolicy(A), al, modes=modes)
+    assert res.t_us.shape == (8,)
+    assert np.isfinite(res.t_us).all()
+
+
+# --------------------------------------------------------------------------
+# DecisionBatch plumbing.
+# --------------------------------------------------------------------------
+def test_decision_batch_groups_in_first_appearance_order():
+    site = np.empty(5, dtype=object)
+    site[:] = ["x", "y", "x", "z", "y"]
+    b = DecisionBatch(np.arange(5, dtype=np.float64), site,
+                      np.array(["pt2pt"] * 5, dtype=object))
+    got = [(s, list(rows)) for s, _, rows in b.groups()]
+    assert got == [("x", [0, 2]), ("y", [1, 4]), ("z", [3])]
+
+
+def test_decision_batch_shape_validation():
+    with pytest.raises(ValueError):
+        DecisionBatch(np.zeros(3), np.empty(2, dtype=object),
+                      np.empty(3, dtype=object))
+    with pytest.raises(ValueError):
+        DecisionBatch.of([1, 2, 3], site=["a", "b"])

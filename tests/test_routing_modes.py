@@ -1,0 +1,140 @@
+"""RoutingMode bias/scoring edge-case matrix (ISSUE satellite).
+
+Covers every RoutingMode member — including the ±inf deterministic
+modes — through bias_s / score_candidates / spray_weights, plus the
+degenerate inputs (all-inf score rows, zero-packet messages) that the
+seed only exercised implicitly.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.strategies import ADAPTIVE_MODES, RoutingMode
+from repro.dragonfly.routing import (RoutingPolicy, mode_bias_s,
+                                     score_candidates, spray_weights)
+from repro.dragonfly.topology import PAD
+
+ALL_MODES = list(RoutingMode)
+NONMIN = np.array([False, False, True, True])
+
+
+def _links(n=3, ncand=4, hops=5):
+    rng = np.random.default_rng(0)
+    links = rng.integers(0, 50, size=(n, ncand, hops))
+    links[:, :, 3:] = PAD  # ragged path lengths
+    return links
+
+
+EXPECTED_BIAS = {
+    RoutingMode.ADAPTIVE_0: 0.0,
+    RoutingMode.ADAPTIVE_1: 6.0 * 0.5,   # path-average of the ramp
+    RoutingMode.ADAPTIVE_2: 2.0,
+    RoutingMode.ADAPTIVE_3: 8.0,
+    RoutingMode.MIN_HASH: np.inf,
+    RoutingMode.NMIN_HASH: -np.inf,
+    RoutingMode.IN_ORDER: np.inf,
+}
+
+
+@pytest.mark.parametrize("mode", ALL_MODES)
+def test_bias_matrix_every_mode(mode):
+    unit = 20e-6
+    b = mode_bias_s(mode, unit)
+    want = EXPECTED_BIAS[mode]
+    if np.isinf(want):
+        # deterministic modes: raw ±inf sentinel, never scaled by the unit
+        assert b == want
+    else:
+        assert b == pytest.approx(want * unit)
+    assert RoutingPolicy(mode, bias_unit_s=unit).bias_s == b
+
+
+@pytest.mark.parametrize("mode", ALL_MODES)
+def test_score_candidates_every_mode(mode):
+    links = _links()
+    est = np.random.default_rng(1).uniform(0, 1e-4, size=60)
+    pol = RoutingPolicy(mode)
+    sc = score_candidates(links, est, NONMIN, pol)
+    assert sc.shape == (3, 4)
+    assert not np.isnan(sc).any()
+    b = pol.bias_s
+    if np.isposinf(b):       # deterministic minimal: nonmin unusable
+        assert np.isinf(sc[:, 2:]).all() and np.isfinite(sc[:, :2]).all()
+    elif np.isneginf(b):     # deterministic non-minimal: min unusable
+        assert np.isinf(sc[:, :2]).all() and np.isfinite(sc[:, 2:]).all()
+    else:
+        assert np.isfinite(sc).all()
+
+
+@pytest.mark.parametrize("mode", ALL_MODES)
+def test_batched_modes_match_scalar_policy_path(mode):
+    """score_candidates(modes=[m]*n) == score_candidates(policy(m)) for
+    every mode — the engine's per-flow path is score-identical to the
+    legacy one-policy-per-phase path."""
+    links = _links()
+    est = np.random.default_rng(2).uniform(0, 1e-4, size=60)
+    pol = RoutingPolicy(mode)
+    scalar = score_candidates(links, est, NONMIN, pol)
+    modes = np.full(3, mode, dtype=object)
+    batched = score_candidates(links, est, NONMIN,
+                               RoutingPolicy(RoutingMode.ADAPTIVE_0),
+                               modes=modes)
+    assert np.array_equal(scalar, batched)
+
+
+def test_mixed_mode_batch_weight_placement():
+    """MIN_HASH rows put zero weight on non-minimal candidates and
+    NMIN_HASH rows zero on minimal, inside ONE batched call."""
+    links = _links(n=4)
+    est = np.zeros(60)
+    modes = np.empty(4, dtype=object)
+    modes[:] = [RoutingMode.MIN_HASH, RoutingMode.NMIN_HASH,
+                RoutingMode.ADAPTIVE_0, RoutingMode.IN_ORDER]
+    pol = RoutingPolicy(RoutingMode.ADAPTIVE_0)
+    sc = score_candidates(links, est, NONMIN, pol, modes=modes)
+    w = spray_weights(sc, pol)
+    assert w[0, 2:].sum() == 0.0 and w[0, :2].sum() == pytest.approx(1.0)
+    assert w[1, :2].sum() == 0.0 and w[1, 2:].sum() == pytest.approx(1.0)
+    assert w[2].sum() == pytest.approx(1.0)
+    assert w[3, 2:].sum() == 0.0
+
+
+def test_spray_weights_all_inf_row_is_graceful():
+    """A row with no usable candidate (all scores inf) must not produce
+    NaNs — it degrades to zero weight everywhere (no bytes routed)."""
+    pol = RoutingPolicy(RoutingMode.ADAPTIVE_0)
+    sc = np.array([[np.inf, np.inf, np.inf],
+                   [1e-6, 2e-6, np.inf]])
+    w = spray_weights(sc, pol)
+    assert not np.isnan(w).any()
+    assert w[0].sum() == 0.0
+    assert w[1].sum() == pytest.approx(1.0)
+    # with per-packet jitter too
+    w = spray_weights(sc, pol, np.random.default_rng(0),
+                      packets=np.array([4.0, 4.0]))
+    assert not np.isnan(w).any()
+    assert w[0].sum() == 0.0
+
+
+def test_spray_weights_zero_packet_messages():
+    """packets=0 rows (empty messages) must not divide by zero."""
+    pol = RoutingPolicy(RoutingMode.ADAPTIVE_0)
+    sc = np.full((2, 3), 1e-6)
+    w = spray_weights(sc, pol, np.random.default_rng(0),
+                      packets=np.zeros(2))
+    assert not np.isnan(w).any()
+    np.testing.assert_allclose(w.sum(axis=1), 1.0, rtol=1e-9)
+
+
+@pytest.mark.parametrize("mode", ADAPTIVE_MODES)
+def test_adaptive_bias_ordering(mode):
+    """Higher-bias adaptive modes concentrate strictly more weight on
+    minimal candidates under identical congestion."""
+    links = _links(n=1)
+    est = np.full(60, 1e-5)
+    w0 = spray_weights(score_candidates(
+        links, est, NONMIN, RoutingPolicy(RoutingMode.ADAPTIVE_0)),
+        RoutingPolicy(RoutingMode.ADAPTIVE_0))
+    wm = spray_weights(score_candidates(
+        links, est, NONMIN, RoutingPolicy(mode)), RoutingPolicy(mode))
+    assert wm[0, :2].sum() >= w0[0, :2].sum() - 1e-12
