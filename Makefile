@@ -3,7 +3,7 @@
 
 PY ?= python
 
-.PHONY: test bench-smoke lint
+.PHONY: test bench-smoke lint docs
 
 test:
 	$(PY) -m pytest -q
@@ -15,3 +15,8 @@ bench-smoke:
 lint:
 	$(PY) -m compileall -q src benchmarks examples tests
 	$(PY) scripts/ci_lint.py
+
+# documentation health: README/docs internal links resolve, and no
+# __pycache__/*.pyc is tracked in git
+docs:
+	$(PY) scripts/ci_lint.py --docs

@@ -1,16 +1,108 @@
-"""Dependency-free lint: line length + trailing whitespace over src/."""
+"""Dependency-free CI checks.
 
+Default mode: line length + trailing whitespace over the Python tree.
+``--docs`` mode (the Makefile `docs` target): README/docs internal-link
+integrity + no stray __pycache__/*.pyc tracked in git.
+"""
+
+import argparse
 import pathlib
 import re
+import subprocess
 import sys
 
-bad = []
-for root in ("src", "benchmarks", "examples"):
-    for p in pathlib.Path(root).rglob("*.py"):
-        for i, line in enumerate(p.read_text().splitlines(), 1):
-            if len(line) > 100:
-                bad.append(f"{p}:{i}: line too long ({len(line)} > 100)")
-            if re.search(r"[ \t]+$", line):
-                bad.append(f"{p}:{i}: trailing whitespace")
-print("\n".join(bad))
-sys.exit(1 if bad else 0)
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+# version-drifting jax symbols that must be reached via repro.compat
+# (docs/compat.md); the shim package and its tests are the only homes
+_BARE_JAX_RE = re.compile(
+    r"jax\.set_mesh|jax\.sharding\.AxisType"
+    r"|jax\.sharding\.get_abstract_mesh|jax\.shard_map"
+    r"|jax\.experimental\.shard_map")
+_SHIM_EXEMPT = ("src/repro/compat/", "tests/test_compat.py")
+
+
+def lint_style() -> list:
+    bad = []
+    for root in ("src", "benchmarks", "examples"):
+        for p in (ROOT / root).rglob("*.py"):
+            if "__pycache__" in p.parts:
+                continue
+            for i, line in enumerate(p.read_text().splitlines(), 1):
+                rel = p.relative_to(ROOT)
+                if len(line) > 100:
+                    bad.append(f"{rel}:{i}: line too long ({len(line)} > 100)")
+                if re.search(r"[ \t]+$", line):
+                    bad.append(f"{rel}:{i}: trailing whitespace")
+    return bad
+
+
+def lint_docs_links() -> list:
+    """Every relative markdown link in README.md / docs/*.md resolves."""
+    bad = []
+    pages = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    for page in pages:
+        if not page.exists():
+            bad.append(f"{page.relative_to(ROOT)}: missing")
+            continue
+        for i, line in enumerate(page.read_text().splitlines(), 1):
+            for target in _LINK_RE.findall(line):
+                if target.startswith(_EXTERNAL) or target.startswith("#"):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:
+                    continue
+                if not (page.parent / path).resolve().exists():
+                    bad.append(f"{page.relative_to(ROOT)}:{i}: "
+                               f"broken link -> {target}")
+    return bad
+
+
+def lint_bare_jax_calls() -> list:
+    """No version-gated jax API used outside the repro.compat shims."""
+    bad = []
+    for root in ("src", "benchmarks", "examples", "tests", "scripts"):
+        for p in (ROOT / root).rglob("*.py"):
+            if "__pycache__" in p.parts:
+                continue
+            rel = p.relative_to(ROOT).as_posix()
+            if rel.startswith(_SHIM_EXEMPT[0]) or rel == _SHIM_EXEMPT[1]:
+                continue
+            for i, line in enumerate(p.read_text().splitlines(), 1):
+                m = _BARE_JAX_RE.search(line)
+                if m:
+                    bad.append(f"{rel}:{i}: bare {m.group(0)} — go through "
+                               f"repro.compat (docs/compat.md)")
+    return bad
+
+
+def lint_tracked_pycache() -> list:
+    """No __pycache__ dirs or *.pyc files committed to the repo."""
+    try:
+        out = subprocess.run(["git", "ls-files"], cwd=ROOT, check=True,
+                             capture_output=True, text=True).stdout
+    except (OSError, subprocess.CalledProcessError):
+        return []  # not a git checkout (e.g. sdist) — nothing to check
+    return [f"{f}: __pycache__/*.pyc tracked in git (add to .gitignore)"
+            for f in out.splitlines()
+            if "__pycache__" in f or f.endswith(".pyc")]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", action="store_true",
+                    help="check README/docs links, tracked __pycache__, "
+                         "and bare version-gated jax calls instead of "
+                         "Python style")
+    args = ap.parse_args(argv)
+    bad = (lint_docs_links() + lint_tracked_pycache()
+           + lint_bare_jax_calls()) if args.docs else lint_style()
+    print("\n".join(bad))
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

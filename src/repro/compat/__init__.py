@@ -1,0 +1,36 @@
+"""repro.compat — one version-gated shim layer over the jax API drift.
+
+The reproduction is written against the jax>=0.7 mesh/sharding surface;
+the container ships jax 0.4.37.  Every call site that would differ
+between the two goes through this package instead of jax directly:
+
+    from repro import compat
+
+    mesh = compat.make_mesh((4, 4), ("data", "model"))   # Auto axes
+    with compat.set_mesh(mesh):                          # set_mesh / ctx
+        sizes = compat.abstract_axis_sizes()             # {"data": 4, ...}
+    fn = compat.shard_map(body, mesh=mesh, in_specs=..., out_specs=...,
+                          check_vma=False)               # check_rep on 0.4
+    if compat.jax_version_at_least("0.7"):
+        ...
+
+See docs/compat.md for the full version matrix.  Dispatch happens at
+call time on the `repro.compat.version.HAS_*` feature flags, so tests
+monkeypatch a flag plus a fake jax attribute to exercise the modern
+branch on an old jax (tests/test_compat.py).
+"""
+
+from repro.compat.compilation import cost_analysis
+from repro.compat.mesh import (abstract_axis_sizes, axis_types,
+                               get_abstract_mesh, make_mesh, set_mesh)
+from repro.compat.shardmap import shard_map
+from repro.compat.version import (JAX_VERSION, describe,
+                                  jax_version_at_least, parse_version)
+
+__all__ = [
+    "JAX_VERSION", "jax_version_at_least", "parse_version", "describe",
+    "abstract_axis_sizes", "axis_types", "get_abstract_mesh",
+    "make_mesh", "set_mesh",
+    "shard_map",
+    "cost_analysis",
+]

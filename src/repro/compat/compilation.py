@@ -1,0 +1,17 @@
+"""Compiled-artifact shims.
+
+`Compiled.cost_analysis()` drifted alongside the mesh APIs: jax 0.4.x
+returns a list of per-program property dicts, jax>=0.7 returns the
+single flattened dict.  The dry-run reads scalar keys ("flops", ...),
+so normalize to the modern dict shape on both.
+"""
+
+from __future__ import annotations
+
+
+def cost_analysis(compiled) -> dict:
+    """`compiled.cost_analysis()` as a single dict on every jax."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}

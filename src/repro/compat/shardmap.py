@@ -1,0 +1,24 @@
+"""`shard_map` shim.
+
+jax>=0.7 exposes `jax.shard_map(..., check_vma=...)`; jax 0.4.x has
+`jax.experimental.shard_map.shard_map(..., check_rep=...)`.  Same
+semantics (per-shard replication/varying-mesh-axes checking), renamed
+keyword.  All repo call sites go through here with the modern spelling.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.compat import version as _v
+
+
+def shard_map(f, *, mesh=None, in_specs=None, out_specs=None,
+              check_vma: bool = True):
+    """`jax.shard_map` on both jax generations (check_vma == check_rep)."""
+    if _v.HAS_TOPLEVEL_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)

@@ -1,0 +1,74 @@
+"""JAX version detection for the `repro.compat` shim layer.
+
+The repo targets the jax>=0.7 mesh/sharding surface (`jax.set_mesh`,
+`jax.sharding.AxisType`, `jax.sharding.get_abstract_mesh`,
+`jax.shard_map`) but must run on the container's jax 0.4.37, where none
+of those exist.  Everything here is plain feature detection: the
+`HAS_*` flags answer "does the installed jax expose this symbol?" and
+the shims in `mesh.py` / `shardmap.py` branch on them at *call* time,
+so tests can monkeypatch a flag (plus a fake API) to exercise the
+modern branch on an old jax.
+
+`jax_version_at_least()` is the coarse guard for callers that need a
+version-shaped question answered ("is this >= 0.7?") rather than a
+single symbol; prefer the feature flags inside this package.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def parse_version(text: str) -> tuple:
+    """"0.4.37" / "0.7.0.dev20250101" -> (0, 4, 37) / (0, 7, 0)."""
+    parts = []
+    for token in str(text).split(".")[:3]:
+        digits = ""
+        for ch in token:
+            if not ch.isdigit():
+                break
+            digits += ch
+        if not digits:
+            break
+        parts.append(int(digits))
+    while len(parts) < 3:
+        parts.append(0)
+    return tuple(parts)
+
+
+#: (major, minor, patch) of the installed jax.
+JAX_VERSION: tuple = parse_version(jax.__version__)
+
+
+def jax_version_at_least(major, minor: int = 0, patch: int = 0) -> bool:
+    """True when the installed jax is >= the given version.
+
+    Accepts either a string (``jax_version_at_least("0.7")``) or
+    integer components (``jax_version_at_least(0, 7)``).
+    """
+    if isinstance(major, str):
+        want = parse_version(major)
+    else:
+        want = (int(major), int(minor), int(patch))
+    return JAX_VERSION >= want
+
+
+# ------------------------------------------------------- feature flags
+# Evaluated once at import; the shims read them through the module
+# (`version.HAS_SET_MESH`) so monkeypatching redirects dispatch.
+HAS_SET_MESH: bool = hasattr(jax, "set_mesh")
+HAS_AXIS_TYPE: bool = hasattr(jax.sharding, "AxisType")
+HAS_GET_ABSTRACT_MESH: bool = hasattr(jax.sharding, "get_abstract_mesh")
+HAS_TOPLEVEL_SHARD_MAP: bool = hasattr(jax, "shard_map")
+
+
+def describe() -> dict:
+    """Diagnostic snapshot of the detected surface (docs/compat.md)."""
+    return {
+        "jax": jax.__version__,
+        "jax_version": JAX_VERSION,
+        "set_mesh": HAS_SET_MESH,
+        "axis_type": HAS_AXIS_TYPE,
+        "get_abstract_mesh": HAS_GET_ABSTRACT_MESH,
+        "toplevel_shard_map": HAS_TOPLEVEL_SHARD_MAP,
+    }

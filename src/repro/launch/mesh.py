@@ -1,21 +1,13 @@
 """Production mesh construction.
 
 A FUNCTION, not a module-level constant, so importing this module never
-touches jax device state (the dry-run must set XLA_FLAGS first)."""
+touches jax device state (the dry-run must set XLA_FLAGS first).  Mesh
+construction goes through repro.compat, which applies Auto axis_types
+on jax>=0.7 and omits them on 0.4.x (see docs/compat.md)."""
 
 from __future__ import annotations
 
-import jax
-
-
-def _make_mesh(shape: tuple, axes: tuple):
-    # jax.sharding.AxisType landed after 0.4.37; Auto is the default there,
-    # so only pass axis_types when the installed jax knows it.
-    if hasattr(jax.sharding, "AxisType"):
-        return jax.make_mesh(shape, axes,
-                             axis_types=(jax.sharding.AxisType.Auto,)
-                             * len(axes))
-    return jax.make_mesh(shape, axes)
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,9 +15,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     for the 512-chip two-pod configuration."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return _make_mesh(shape, axes)
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh_for(shape: tuple, axes: tuple):
     """Elastic variant: build whatever mesh the ElasticPlanner chose."""
-    return _make_mesh(tuple(shape), tuple(axes))
+    return compat.make_mesh(tuple(shape), tuple(axes))

@@ -182,13 +182,8 @@ def activation(x, kind: str):
 # ----------------------------------------------------- activation sharding
 def mesh_axes() -> dict:
     """Axis sizes of the active abstract mesh ({} outside set_mesh)."""
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-    except Exception:  # pragma: no cover
-        return {}
-    if mesh is None or not mesh.axis_names:
-        return {}
-    return {a: mesh.shape[a] for a in mesh.axis_names}
+    from repro.compat import abstract_axis_sizes
+    return abstract_axis_sizes()
 
 
 def dp_spec():

@@ -95,6 +95,7 @@ def make_engine(name: str, *,
                 config: AppAwareConfig | None = None,
                 granularity: str = "phase",
                 epsilon: float = 0.1,
+                epsilon_decay: float = 0.05,
                 static_mode: Hashable = None,
                 seed: int = 0,
                 bus: TelemetryBus | None = None) -> PolicyEngine:
@@ -121,7 +122,8 @@ def make_engine(name: str, *,
     elif name == "eps_greedy":
         policy = EpsilonGreedyPolicy(
             mode_a=mode_a, mode_b=mode_b,
-            mode_a_alltoall=mode_a_alltoall, epsilon=epsilon, seed=seed)
+            mode_a_alltoall=mode_a_alltoall, epsilon=epsilon,
+            epsilon_decay=epsilon_decay, seed=seed)
     else:
         raise ValueError(
             f"unknown policy {name!r}; expected one of {POLICY_NAMES}")

@@ -61,16 +61,26 @@ class EpsilonGreedyPolicy:
     cost (unobserved arms are tried first).  Fully vectorized: one rng
     draw per row, one automaton touch per (site, kind) group.
     update(): per-arm weighted-mean cost folded into the EMA.
+
+    ε follows the decayed schedule ``eps0 / (1 + k·t)`` where t counts
+    prior decide() touches of the site and k is `epsilon_decay`: early
+    phases explore, converged phases stop paying the exploration tax
+    (constant-ε never beat Algorithm 1 in fig8 cells because it kept
+    routing ε of the traffic through the losing arm forever).
+    `epsilon_decay=0` recovers the constant-ε bandit.
     """
 
     mode_a: Hashable
     mode_b: Hashable
     mode_a_alltoall: Hashable = None
     epsilon: float = 0.1
+    #: k in eps0 / (1 + k·t); t = prior decide() touches of the site
+    epsilon_decay: float = 0.05
     ema: float = 0.3           # EMA weight of the newest cost sample
     seed: int = 0
     _rng: np.random.Generator = None
     _arms: dict = field(default_factory=dict)  # (site, mode) -> _ArmStats
+    _site_steps: dict = field(default_factory=dict)  # site -> decide touches
     _pending: list = field(default_factory=list)
 
     def __post_init__(self):
@@ -86,10 +96,18 @@ class EpsilonGreedyPolicy:
             st = self._arms[key] = _ArmStats()
         return st
 
+    def effective_epsilon(self, site: Hashable) -> float:
+        """Current ε at `site`: eps0 / (1 + k·t)."""
+        t = self._site_steps.get(site, 0)
+        return self.epsilon / (1.0 + self.epsilon_decay * t)
+
     def decide(self, batch: DecisionBatch) -> np.ndarray:
         n = len(batch)
         modes = np.empty(n, dtype=object)
         pending = []
+        # ε is sampled once per site per decide() — a batch mixing kinds
+        # at one site is still a single schedule step for that site
+        site_eps: dict = {}
         for site, kind, rows in batch.groups():
             a = self.mode_a_alltoall if kind == KIND_ALLTOALL else self.mode_a
             b = self.mode_b
@@ -101,13 +119,16 @@ class EpsilonGreedyPolicy:
                 exploit = b
             else:
                 exploit = a if sa.cost <= sb.cost else b
-            explore = self._rng.random(len(rows)) < self.epsilon
+            eps = site_eps.setdefault(site, self.effective_epsilon(site))
+            explore = self._rng.random(len(rows)) < eps
             coin = self._rng.random(len(rows)) < 0.5
             row_modes = np.full(len(rows), exploit, dtype=object)
             row_modes[explore & coin] = a
             row_modes[explore & ~coin] = b
             modes[rows] = row_modes
             pending.append((site, rows, row_modes))
+        for site in site_eps:
+            self._site_steps[site] = self._site_steps.get(site, 0) + 1
         self._pending = pending
         return modes
 

@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.collectives.moe_ep import moe_ep, moe_ep_ref
 from repro.collectives.modes import CollectiveMode
 from repro.collectives.selector import AppAwareSelector, ICICostModel, MeshSpec
@@ -38,9 +39,8 @@ def test_moe_ep_matches_ref_on_trivial_mesh():
     p = init_moe(jax.random.PRNGKey(0), cfg)
     x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 16, 32)),
                     jnp.float32)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    with jax.set_mesh(mesh):
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    with compat.set_mesh(mesh):
         y_ep, aux_ep = jax.jit(lambda p, x: moe_ep(p, x, cfg))(p, x)
     y_ref, aux_ref = moe_ep_ref(p, x, cfg)
     np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_ref),
@@ -53,9 +53,8 @@ def test_moe_ep_grads_finite():
     p = init_moe(jax.random.PRNGKey(0), cfg)
     x = jnp.asarray(np.random.default_rng(1).standard_normal((2, 8, 32)),
                     jnp.float32)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    with jax.set_mesh(mesh):
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    with compat.set_mesh(mesh):
         g = jax.jit(jax.grad(lambda p, x: moe_ep(p, x, cfg)[0].sum()))(p, x)
     for leaf in jax.tree_util.tree_leaves(g):
         assert np.isfinite(np.asarray(leaf)).all()

@@ -257,6 +257,50 @@ def test_eps_greedy_explores_both_arms():
     assert {m for m in modes} == {A, B}
 
 
+def test_eps_greedy_epsilon_decays_per_site():
+    """eps0 / (1 + k·t) with t = prior decide() touches of the site."""
+    pol = EpsilonGreedyPolicy(mode_a=A, mode_b=B, epsilon=1.0,
+                              epsilon_decay=1.0, seed=0)
+    assert pol.effective_epsilon("s") == pytest.approx(1.0)
+    for t in range(1, 5):
+        pol.decide(DecisionBatch.of(np.full(8, 1 << 16), site="s"))
+        assert pol.effective_epsilon("s") == pytest.approx(1.0 / (1 + t))
+    # sites decay independently; zero decay recovers constant ε
+    assert pol.effective_epsilon("fresh") == pytest.approx(1.0)
+    # a batch mixing kinds at one site is ONE schedule step, not two
+    mixed = EpsilonGreedyPolicy(mode_a=A, mode_b=B, epsilon=1.0,
+                                epsilon_decay=1.0, seed=0)
+    kinds = np.array([KIND_PT2PT] * 4 + [KIND_ALLTOALL] * 4, dtype=object)
+    mixed.decide(DecisionBatch.of(np.full(8, 1 << 16), site="s",
+                                  kind=kinds))
+    assert mixed.effective_epsilon("s") == pytest.approx(1.0 / 2.0)
+    flat = EpsilonGreedyPolicy(mode_a=A, mode_b=B, epsilon=0.3,
+                               epsilon_decay=0.0, seed=0)
+    for _ in range(10):
+        flat.decide(DecisionBatch.of(np.full(8, 1 << 16), site="s"))
+    assert flat.effective_epsilon("s") == pytest.approx(0.3)
+
+
+def test_eps_greedy_decay_stops_exploring():
+    """With decay the converged policy routes (almost) everything to the
+    winner (the fig8 failure mode was ε of the traffic exploring
+    forever)."""
+    pol = EpsilonGreedyPolicy(mode_a=A, mode_b=B, epsilon=1.0,
+                              epsilon_decay=10.0, seed=1)
+    eng = PolicyEngine(pol)
+    costs = {A: (100.0, 0.1), B: (100.0, 10.0)}
+    for _ in range(50):
+        modes = eng.decide(DecisionBatch.of(np.full(16, 1 << 16), site="s"))
+        lat = np.array([costs[m][0] for m in modes])
+        stl = np.array([costs[m][1] for m in modes])
+        eng.update(Feedback.of(lat, stl))
+    # schedule, exactly: 50 decide() touches -> eps0 / (1 + 10*50)
+    assert pol.effective_epsilon("s") == pytest.approx(1.0 / 501.0)
+    # behavior, with margin: the losing arm gets at most stray explores
+    modes = eng.decide(DecisionBatch.of(np.full(256, 1 << 16), site="s"))
+    assert np.mean([m is not A for m in modes]) < 0.02
+
+
 # --------------------------------------------------------------------------
 # TelemetryBus normalization.
 # --------------------------------------------------------------------------

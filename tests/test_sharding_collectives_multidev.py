@@ -29,11 +29,11 @@ def test_param_specs_divisibility_rules():
     out = run_sub("""
         import jax, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro import compat
         from repro.configs import get_smoke_config, get_config
         from repro.models import init_params
         from repro.sharding.partition import param_specs, default_policy
-        mesh = jax.make_mesh((4, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = compat.make_mesh((4, 4), ("data", "model"))
         cfg = get_config("llama3-8b")
         params = jax.eval_shape(lambda: init_params(cfg, 0))
         specs = param_specs(params, cfg, mesh)
@@ -57,11 +57,11 @@ def test_moe_expert_parallel_specs():
     out = run_sub("""
         import jax
         from jax.sharding import PartitionSpec as P
+        from repro import compat
         from repro.configs import get_config
         from repro.models import init_params
         from repro.sharding.partition import param_specs
-        mesh = jax.make_mesh((4, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = compat.make_mesh((4, 4), ("data", "model"))
         cfg = get_config("granite-moe-3b-a800m")   # 40 experts % 4 == 0
         params = jax.eval_shape(lambda: init_params(cfg, 0))
         specs = param_specs(params, cfg, mesh)
@@ -76,12 +76,12 @@ def test_allreduce_schedules_agree():
     out = run_sub("""
         import jax, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro import compat
         from repro.collectives import allreduce_direct, allreduce_hierarchical
-        mesh = jax.make_mesh((2, 2, 4), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        mesh = compat.make_mesh((2, 2, 4), ("pod", "data", "model"))
         x = np.random.default_rng(0).standard_normal((16, 8, 3)).astype(np.float32)
         def run(fn):
-            return jax.shard_map(fn, mesh=mesh,
+            return compat.shard_map(fn, mesh=mesh,
                                  in_specs=P(("pod", "data", "model")),
                                  out_specs=P(("pod", "data", "model")),
                                  check_vma=False)(x)
@@ -97,25 +97,25 @@ def test_alltoall_schedules_roundtrip():
     out = run_sub("""
         import jax, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro import compat
         from repro.collectives import alltoall_direct, alltoall_hierarchical
-        mesh = jax.make_mesh((2, 2, 4), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        mesh = compat.make_mesh((2, 2, 4), ("pod", "data", "model"))
         y = np.arange(64*4, dtype=np.float32).reshape(64, 4)
-        da = jax.shard_map(lambda v: alltoall_direct(v, "model"), mesh=mesh,
-                           in_specs=P(("pod", "data", "model")),
-                           out_specs=P(("pod", "data", "model")),
-                           check_vma=False)(y)
+        da = compat.shard_map(lambda v: alltoall_direct(v, "model"), mesh=mesh,
+                              in_specs=P(("pod", "data", "model")),
+                              out_specs=P(("pod", "data", "model")),
+                              check_vma=False)(y)
         # a2a is an involution on 2 axes of equal split: applying the
         # direct exchange twice restores the input
-        da2 = jax.shard_map(lambda v: alltoall_direct(alltoall_direct(v, "model"), "model"),
-                            mesh=mesh, in_specs=P(("pod", "data", "model")),
-                            out_specs=P(("pod", "data", "model")),
-                            check_vma=False)(y)
+        da2 = compat.shard_map(lambda v: alltoall_direct(alltoall_direct(v, "model"), "model"),
+                               mesh=mesh, in_specs=P(("pod", "data", "model")),
+                               out_specs=P(("pod", "data", "model")),
+                               check_vma=False)(y)
         np.testing.assert_allclose(np.asarray(da2), y)
-        h = jax.shard_map(lambda v: alltoall_hierarchical(v, "pod", "data"),
-                          mesh=mesh, in_specs=P(("pod", "data", "model")),
-                          out_specs=P(("pod", "data", "model")),
-                          check_vma=False)(y)
+        h = compat.shard_map(lambda v: alltoall_hierarchical(v, "pod", "data"),
+                             mesh=mesh, in_specs=P(("pod", "data", "model")),
+                             out_specs=P(("pod", "data", "model")),
+                             check_vma=False)(y)
         assert np.asarray(h).shape == y.shape
         print("OK")
         """)
@@ -127,10 +127,10 @@ def test_grad_allreduce_means_over_dp():
         import jax, numpy as np
         import jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro import compat
         from repro.collectives import grad_allreduce
         from repro.collectives.modes import CollectiveMode
-        mesh = jax.make_mesh((2, 2, 4), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        mesh = compat.make_mesh((2, 2, 4), ("pod", "data", "model"))
         g = {"w": jnp.ones((8, 4))}
         for mode in (CollectiveMode.DIRECT, CollectiveMode.HIERARCHICAL):
             out = grad_allreduce(g, mesh, mode=mode)
@@ -143,16 +143,15 @@ def test_grad_allreduce_means_over_dp():
 def test_elastic_reshard_to_new_mesh():
     out = run_sub("""
         import jax, numpy as np
+        from repro import compat
         from repro.configs import get_smoke_config
         from repro.models import init_params
         from repro.ckpt.elastic import reshard_checkpoint
         cfg = get_smoke_config("llama3-8b")
         params = init_params(cfg, 0)
         host = jax.tree_util.tree_map(np.asarray, params)
-        mesh_small = jax.make_mesh((2, 2), ("data", "model"),
-                                   axis_types=(jax.sharding.AxisType.Auto,)*2)
-        mesh_big = jax.make_mesh((4, 4), ("data", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh_small = compat.make_mesh((2, 2), ("data", "model"))
+        mesh_big = compat.make_mesh((4, 4), ("data", "model"))
         a = reshard_checkpoint(host, cfg, mesh_small)
         b = reshard_checkpoint(host, cfg, mesh_big)
         for x, y in zip(jax.tree_util.tree_leaves(a),
