@@ -3,14 +3,20 @@
 
 PY ?= python
 
-.PHONY: test bench-smoke lint docs
+.PHONY: test bench-smoke bench-perf lint docs
 
+# tier-1 verify (ROADMAP): same flags as CI
 test:
-	$(PY) -m pytest -q
+	$(PY) -m pytest -x -q
 
 # reduced benchmark pass (the CI perf smoke; --full is the paper-scale run)
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only fig7,fig8,tpu --policy app_aware
+
+# simulator phase-kernel perf trajectory: write + schema-check BENCH_sim.json
+bench-perf:
+	PYTHONPATH=src $(PY) -m benchmarks.perf_sim --smoke --out BENCH_sim.json
+	$(PY) scripts/ci_lint.py --bench
 
 lint:
 	$(PY) -m compileall -q src benchmarks examples tests

@@ -45,9 +45,11 @@ def run_app(topo, name, pattern, args, ranks, comm_frac, iters, seed=0,
         for m in modes:
             if isinstance(m, str):
                 r = run_iteration_engine(sim, al, phases, engine,
-                                         site=name, kind=kind)
+                                         site=name, kind=kind,
+                                         use_plans=True)
             else:
-                r = run_iteration(sim, al, phases, RoutingPolicy(m))
+                r = run_iteration(sim, al, phases, RoutingPolicy(m),
+                                  use_plans=True)
             comm = r.time_us
             compute = comm * (1 - comm_frac) / max(comm_frac, 1e-3) \
                 * rng.lognormal(0, 0.05)

@@ -41,7 +41,8 @@ def run(iters: int = 40, seeds: int = 4):
                     r = run_iteration_engine(
                         sim, al, pingpong(2, SIZE), engines[m],
                         site=f"pingpong.{tier}",
-                        counter_read_overhead_us=0.0)
+                        counter_read_overhead_us=0.0,
+                        use_plans=True)   # identical rounds share a plan
                     res[m]["t"].append(r.time_us)
                     res[m]["l"].append(r.mean_latency_us)
                     res[m]["s"].append(r.mean_stalls)

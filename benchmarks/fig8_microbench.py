@@ -44,7 +44,8 @@ def run(machine: str = "daint", iters: int = 8, seed: int = 0,
             sim = DragonflySimulator(topo, SimParams(seed=seed,
                                                      max_flows=max_flows))
             al = make_allocation(topo, n_ranks, spread=groups, seed=seed)
-            res = run_benchmark(sim, al, bench, args, iters, modes=modes)
+            res = run_benchmark(sim, al, bench, args, iters, modes=modes,
+                                use_plans=True)
             key = f"{bench}." + (".".join(f"{v}" for v in args.values())
                                  or "na")
             med_def = np.median([r.time_us

@@ -25,7 +25,7 @@ def main(argv=None) -> None:
     from benchmarks import (fig3_allocation, fig4_fig5_hostnoise,
                             fig7_routing_pingpong, fig8_microbench,
                             fig10_applications, model_validation,
-                            table1_correlation, tpu_selector)
+                            perf_sim, table1_correlation, tpu_selector)
     suites = {
         "fig3": fig3_allocation.main,
         "table1": table1_correlation.main,
@@ -35,6 +35,7 @@ def main(argv=None) -> None:
         "fig10": fig10_applications.main,
         "model": model_validation.main,
         "tpu": tpu_selector.main,
+        "perf": perf_sim.main,
     }
     #: suites whose adaptive arm is a pluggable repro.policy engine
     policy_suites = {"fig8", "fig10"}

@@ -36,7 +36,8 @@ for size in (1024, 65536):
                         iterations=4,
                         modes=(RoutingMode.ADAPTIVE_0,
                                RoutingMode.ADAPTIVE_3,
-                               "app_aware", "eps_greedy"))
+                               "app_aware", "eps_greedy"),
+                        use_plans=True)   # alltoall rounds share one plan
     meds = {}
     for mode, rs in res.items():
         label = mode.value if isinstance(mode, RoutingMode) else mode

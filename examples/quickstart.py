@@ -39,7 +39,7 @@ topo = DragonflyTopology(TopologyParams(n_groups=8))
 sim = DragonflySimulator(topo, SimParams(seed=0))
 alloc = make_allocation(topo, 32, spread="groups:4", seed=0)
 res = run_benchmark(sim, alloc, "alltoall", dict(size_per_pair=32768),
-                    iterations=4)
+                    iterations=4, use_plans=True)
 for mode, rs in res.items():
     label = mode.value if isinstance(mode, RoutingMode) else mode
     print(f"alltoall 32KiB x 32 ranks [{label:12s}] "

@@ -3,9 +3,12 @@
 Default mode: line length + trailing whitespace over the Python tree.
 ``--docs`` mode (the Makefile `docs` target): README/docs internal-link
 integrity + no stray __pycache__/*.pyc tracked in git.
+``--bench`` mode (the Makefile `bench-perf` target): BENCH_sim.json
+exists and parses against its schema (docs/performance.md).
 """
 
 import argparse
+import json
 import pathlib
 import re
 import subprocess
@@ -91,15 +94,62 @@ def lint_tracked_pycache() -> list:
             if "__pycache__" in f or f.endswith(".pyc")]
 
 
+#: BENCH_sim.json contract (emitted by benchmarks/perf_sim.py): top-level
+#: fields -> type, and per-backend numeric fields
+_BENCH_SCHEMA_TOP = {"schema": str, "flows": int, "phases_timed": int,
+                     "topology": dict, "seed_exact": bool,
+                     "backends": dict, "speedup": dict}
+_BENCH_BACKEND_FIELDS = ("phase_s", "phases_per_s", "flows_per_s")
+
+
+def lint_bench_schema(require: bool = False) -> list:
+    """BENCH_sim.json parses and matches the bench_sim/v1 schema."""
+    path = ROOT / "BENCH_sim.json"
+    if not path.exists():
+        return ["BENCH_sim.json: missing (run `make bench-perf`)"] \
+            if require else []
+    try:
+        doc = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        return [f"BENCH_sim.json: unparseable ({e})"]
+    bad = []
+    for key, typ in _BENCH_SCHEMA_TOP.items():
+        if key not in doc:
+            bad.append(f"BENCH_sim.json: missing key {key!r}")
+        elif not isinstance(doc[key], typ):
+            bad.append(f"BENCH_sim.json: {key!r} should be {typ.__name__}")
+    if doc.get("schema") not in (None, "bench_sim/v1"):
+        bad.append(f"BENCH_sim.json: unknown schema {doc.get('schema')!r}")
+    for name, entry in (doc.get("backends") or {}).items():
+        for f in _BENCH_BACKEND_FIELDS:
+            if not isinstance(entry.get(f), (int, float)):
+                bad.append(f"BENCH_sim.json: backends.{name}.{f} "
+                           f"missing or non-numeric")
+        if not isinstance(entry.get("stages_s", {}), dict):
+            bad.append(f"BENCH_sim.json: backends.{name}.stages_s "
+                       f"should be a dict")
+    for name, v in (doc.get("speedup") or {}).items():
+        if not isinstance(v, (int, float)):
+            bad.append(f"BENCH_sim.json: speedup.{name} non-numeric")
+    return bad
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--docs", action="store_true",
                     help="check README/docs links, tracked __pycache__, "
                          "and bare version-gated jax calls instead of "
                          "Python style")
+    ap.add_argument("--bench", action="store_true",
+                    help="require BENCH_sim.json and check its schema")
     args = ap.parse_args(argv)
-    bad = (lint_docs_links() + lint_tracked_pycache()
-           + lint_bare_jax_calls()) if args.docs else lint_style()
+    if args.bench:
+        bad = lint_bench_schema(require=True)
+    elif args.docs:
+        bad = (lint_docs_links() + lint_tracked_pycache()
+               + lint_bare_jax_calls() + lint_bench_schema())
+    else:
+        bad = lint_style()
     print("\n".join(bad))
     return 1 if bad else 0
 

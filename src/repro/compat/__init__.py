@@ -23,6 +23,8 @@ branch on an old jax (tests/test_compat.py).
 from repro.compat.compilation import cost_analysis
 from repro.compat.mesh import (abstract_axis_sizes, axis_types,
                                get_abstract_mesh, make_mesh, set_mesh)
+from repro.compat.runtime import (jax_available, pallas_available,
+                                  resolve_backend)
 from repro.compat.shardmap import shard_map
 from repro.compat.version import (JAX_VERSION, describe,
                                   jax_version_at_least, parse_version)
@@ -33,4 +35,5 @@ __all__ = [
     "make_mesh", "set_mesh",
     "shard_map",
     "cost_analysis",
+    "jax_available", "pallas_available", "resolve_backend",
 ]

@@ -1,0 +1,70 @@
+"""Optional-accelerator feature detection for the simulator backends.
+
+The Dragonfly simulator's ``SimParams.backend = "jax"`` fast path needs
+a working jax (and, for the TPU segment-sum kernel, Pallas).  Feature
+detection lives here — sibling to the version shims — so the simulator
+itself never imports jax at module load and degrades to NumPy cleanly
+on containers without a usable accelerator stack (docs/performance.md).
+"""
+
+from __future__ import annotations
+
+import warnings
+
+_JAX_OK: bool | None = None
+_PALLAS_OK: bool | None = None
+_WARNED_FALLBACK = False
+
+
+def jax_available() -> bool:
+    """Can `import jax` and build a trivial jitted function?"""
+    global _JAX_OK
+    if _JAX_OK is None:
+        try:
+            import jax
+            import jax.numpy as jnp
+
+            jax.jit(lambda x: x + 1)(jnp.zeros(()))
+            _JAX_OK = True
+        except Exception:            # noqa: BLE001 — any failure = absent
+            _JAX_OK = False
+    return _JAX_OK
+
+
+def pallas_available() -> bool:
+    """Is jax.experimental.pallas importable (TPU kernel path)?"""
+    global _PALLAS_OK
+    if _PALLAS_OK is None:
+        if not jax_available():
+            _PALLAS_OK = False
+        else:
+            try:
+                from jax.experimental import pallas  # noqa: F401
+
+                _PALLAS_OK = True
+            except Exception:        # noqa: BLE001
+                _PALLAS_OK = False
+    return _PALLAS_OK
+
+
+def resolve_backend(requested: str) -> str:
+    """Map a requested simulator backend to a usable one.
+
+    "numpy" is always usable; "jax" degrades to "numpy" (warning once)
+    when jax is missing or broken.  Unknown names raise."""
+    if requested == "numpy":
+        return "numpy"
+    if requested != "jax":
+        raise ValueError(f"unknown simulator backend {requested!r}; "
+                         f"expected 'numpy' or 'jax'")
+    # the jitted pipeline imports the Pallas segment-sum kernel at module
+    # load, so a jax without pallas is just as unusable as no jax
+    if jax_available() and pallas_available():
+        return "jax"
+    global _WARNED_FALLBACK
+    if not _WARNED_FALLBACK:
+        warnings.warn("simulator backend 'jax' unavailable in this "
+                      "environment; falling back to 'numpy'",
+                      RuntimeWarning, stacklevel=2)
+        _WARNED_FALLBACK = True
+    return "numpy"

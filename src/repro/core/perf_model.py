@@ -67,6 +67,21 @@ def flits_and_packets(size_bytes: int, is_put: bool = True) -> tuple[int, int]:
     return m.flits, m.packets
 
 
+def flits_and_packets_vec(size_bytes, is_put: bool = True):
+    """Vectorized MessageShape over an int array (same values as the
+    scalar path; integer ceilings avoid float rounding)."""
+    import numpy as np
+
+    size = np.asarray(size_bytes, dtype=np.int64)
+    packets = np.maximum(1, (size + PACKET_PAYLOAD_BYTES - 1)
+                         // PACKET_PAYLOAD_BYTES)
+    if not is_put:
+        return packets, packets
+    full, rem = np.divmod(size, PACKET_PAYLOAD_BYTES)
+    tail = np.where(rem > 0, 1 + (rem + 15) // 16, 0)  # 16B per payload flit
+    return full * PUT_FLITS_PER_PACKET + tail, packets
+
+
 def transmission_cycles_eq1(latency_cycles: float, stalls_per_flit: float,
                             flits: int) -> float:
     """Eq. (1): T = L/2 + f*(s+1)."""

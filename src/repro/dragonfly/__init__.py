@@ -12,7 +12,8 @@
 
 from repro.dragonfly.topology import DragonflyTopology, TopologyParams, Allocation
 from repro.dragonfly.routing import RoutingPolicy
-from repro.dragonfly.simulator import DragonflySimulator, SimParams, FlowResult
+from repro.dragonfly.simulator import (DragonflySimulator, SimParams,
+                                       FlowResult, PhasePlan)
 from repro.dragonfly.traffic import (
     pingpong, allreduce, alltoall, barrier, broadcast, halo3d, sweep3d,
     PATTERNS,
@@ -20,7 +21,7 @@ from repro.dragonfly.traffic import (
 
 __all__ = [
     "DragonflyTopology", "TopologyParams", "Allocation", "RoutingPolicy",
-    "DragonflySimulator", "SimParams", "FlowResult",
+    "DragonflySimulator", "SimParams", "FlowResult", "PhasePlan",
     "pingpong", "allreduce", "alltoall", "barrier", "broadcast", "halo3d",
     "sweep3d", "PATTERNS",
 ]

@@ -1,0 +1,118 @@
+"""Jitted JAX backend for the Dragonfly phase kernel.
+
+``SimParams.backend = "jax"`` routes the score -> spray -> feedback
+fixed point -> observables pipeline of ``run_phase`` through ONE
+``jax.jit``-ed function; link-load accumulation goes through the
+Pallas segment-sum kernel (``repro.kernels.segment_sum``) on TPU and
+``jax.ops.segment_sum`` elsewhere.
+
+RNG parity: ALL randomness (background draws, candidate paths, phantom
+noise, per-iteration Gumbel spray noise) is drawn on the host from the
+simulator's NumPy generator — the jitted pipeline is deterministic in
+its inputs, so the jax backend consumes the RNG stream draw-for-draw
+like the NumPy backend and matches it within float32 tolerance
+(documented in docs/performance.md; the tests pin it at rtol=2e-2 for
+the Eq.(2) times with much tighter agreement on the softmin weights).
+
+Shapes are static per jit cache entry: phases with a new (n_flows,
+n_pairs, iters) signature recompile.  The backend therefore suits
+fixed-shape repeated phases (plan-reused collective rounds, train/serve
+step loops) — heterogeneous sweeps should stay on NumPy.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_sum import segment_sum_op
+
+
+@functools.partial(jax.jit, static_argnames=("n_spray", "n_links",
+                                             "force_kernel"))
+def _pipeline(score0, safe, valid, hops, t_rows, noise_scale, gnoise,
+              size_inst, size_all, pair_links, pair_fc, nic_load, nic_ids,
+              link_queue_s, cap_window, window_s, feedback_rho0,
+              rho_threshold, queue_delay_ns, qwait_fraction, stall_gain,
+              nic_latency_ns, hop_latency_ns, *, n_spray: int,
+              n_links: int, force_kernel: bool):
+    validf = valid.astype(jnp.float32)
+
+    def spray(score, g):
+        s = score + g * noise_scale
+        s = jnp.where(jnp.isfinite(s), s, jnp.inf)
+        smin = s.min(axis=1, keepdims=True)
+        smin = jnp.where(jnp.isfinite(smin), smin, 0.0)
+        z = jnp.exp(-(s - smin) / t_rows[:, None])
+        tot = z.sum(axis=1, keepdims=True)
+        tot = jnp.where(tot <= 0, 1.0, tot)
+        return z / tot
+
+    def loads(w):
+        vals = (size_inst[:, None] * w).reshape(-1)[pair_fc]
+        seg = segment_sum_op(vals, pair_links, n_links,
+                             force_kernel=force_kernel)
+        return seg + nic_load
+
+    w = spray(score0, gnoise[0])
+    load_i = loads(w)
+    for it in range(1, n_spray):
+        rho_fb = load_i / cap_window
+        extra = jnp.maximum(0.0, rho_fb - feedback_rho0) * window_s
+        score = score0 + (extra[safe] * validf).sum(axis=-1)
+        w = 0.5 * (w + spray(score, gnoise[it]))
+        load_i = loads(w)
+
+    load_q = segment_sum_op(
+        (size_all[:, None] * w).reshape(-1)[pair_fc], pair_links,
+        n_links, force_kernel=force_kernel)
+    rho = load_i / cap_window
+
+    # --- observables: per-flow (L_us, s) ------------------------------
+    rho_path = rho[safe] * validf                   # [n, ncand, hops]
+    excess = jnp.maximum(0.0, rho_path - rho_threshold)
+    qdelay_ns = queue_delay_ns * excess.sum(axis=-1)
+    qwait_ns = (link_queue_s[safe] * validf).sum(axis=-1) \
+        * qwait_fraction * 1e9
+    lat_ns_cand = 2.0 * nic_latency_ns + hops * hop_latency_ns \
+        + qdelay_ns + qwait_ns
+    lat_us = (lat_ns_cand * w).sum(axis=-1) / 1e3
+    rho_nic = rho[nic_ids]
+    rho_bneck = jnp.maximum(rho_path.max(axis=-1), rho_nic[:, None])
+    s_cand = stall_gain * jnp.maximum(0.0, rho_bneck - rho_threshold)
+    s_flit = (s_cand * w).sum(axis=-1)
+    return w, rho, load_q, lat_us, s_flit
+
+
+def fixed_point_jax(sim, *, score0, safe, valid, hops, est_queue_s,
+                    hl_rows, is_nonmin, bias_rows, posinf, neginf, t_rows,
+                    noise_scale, gnoise, size_inst, size_all, pair_links,
+                    pair_fc, nic_load, nic_ids, cap_window, window_s):
+    """`DragonflySimulator._fixed_point_numpy` signature, jax execution.
+
+    Host-side NumPy float64 inputs go in as float32 (or int32 indices);
+    outputs come back as float64 NumPy arrays.  The score/bias
+    decomposition (est_queue_s, hl_rows, bias terms) is already folded
+    into `score0` by the caller, so only the feedback `extra` term is
+    recomputed in-graph.
+    """
+    del est_queue_s, hl_rows, is_nonmin, bias_rows, posinf, neginf  # folded
+    p = sim.params
+    tp = sim.topo.params
+    f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+    i32 = functools.partial(jnp.asarray, dtype=jnp.int32)
+    out = _pipeline(
+        f32(score0), i32(safe), jnp.asarray(valid), f32(hops),
+        f32(t_rows), f32(noise_scale), f32(gnoise), f32(size_inst),
+        f32(size_all), i32(pair_links), i32(pair_fc), f32(nic_load),
+        i32(nic_ids), f32(sim.link_queue_s),
+        f32(cap_window), f32(window_s), f32(p.feedback_rho0),
+        f32(p.rho_threshold), f32(p.queue_delay_ns), f32(p.qwait_fraction),
+        f32(p.stall_gain), f32(tp.nic_latency_ns), f32(tp.hop_latency_ns),
+        n_spray=int(gnoise.shape[0]), n_links=int(sim.topo.n_links),
+        force_kernel=False)
+    return tuple(np.asarray(o, dtype=np.float64) for o in out)

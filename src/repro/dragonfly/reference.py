@@ -1,0 +1,200 @@
+"""Pre-refactor `run_phase` preserved verbatim as an equivalence oracle.
+
+This module is the PR-3 snapshot of `DragonflySimulator.run_phase` from
+before the vectorized fast path (bincount segment-sums, hoisted score
+base, mode-code bias tables) replaced its kernels.  It exists for two
+consumers only:
+
+  * the golden-trace tests (`tests/test_dragonfly_fastpath.py`), which
+    assert the fast path is seed-for-seed equivalent to this oracle —
+    bit-identical with `route_feedback_iters=1` and within ~1e-9
+    relative otherwise (the hoisted `extra` term reassociates one
+    float64 sum; see docs/performance.md);
+  * `benchmarks/perf_sim.py`, which measures the fast-path speedup
+    against it (the BENCH_sim.json "reference" stage).
+
+It deliberately re-uses the simulator instance's state and RNG —
+calling it advances `sim.rng`, `sim.link_queue_s`, `sim.est_memory_s`,
+counters and the clock exactly like the pre-refactor method did, so a
+fresh simulator driven through this function replays the pre-refactor
+trajectory draw for draw.  The only intentional deviation: background
+flows come from the *fixed* `sim._bg_flows` (the resample-to-
+disjointness satellite fix), so oracle and fast path stay comparable on
+every seed; the two differ from the seed-era code only in the rare
+buggy case where an other-job flow used to survive on the allocation's
+nodes.
+
+Do not "improve" this file — its value is that it does not change.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.counters import NICCounters
+from repro.core.perf_model import MAX_OUTSTANDING_PACKETS
+from repro.core.strategies import RoutingMode
+from repro.dragonfly.routing import (RoutingPolicy, score_candidates,
+                                     spray_weights)
+from repro.dragonfly.topology import PAD, Allocation
+
+
+def reference_run_phase(sim, src_nodes, dst_nodes, bytes_,
+                        policy: RoutingPolicy,
+                        allocation: Allocation | None = None,
+                        modes: np.ndarray | None = None):
+    """The pre-refactor `run_phase` body, operating on `sim`'s state."""
+    from repro.dragonfly.simulator import FlowResult  # cycle-free import
+
+    p = sim.params
+    topo = sim.topo
+    src = np.asarray(src_nodes, dtype=np.int64)
+    dst = np.asarray(dst_nodes, dtype=np.int64)
+    size = np.asarray(bytes_, dtype=np.float64)
+    n_app = src.shape[0]
+    if modes is not None and np.shape(modes)[0] != n_app:
+        raise ValueError("modes must have one entry per app flow")
+    if n_app == 0 and not (p.bg_enable and p.bg_flows_per_phase):
+        return FlowResult(*(np.zeros(0),) * 5, 0.0)
+
+    # statistical subsample of very large phases (load-preserving)
+    if n_app > p.max_flows:
+        idx = sim.rng.choice(n_app, size=p.max_flows, replace=False)
+        scale = n_app / p.max_flows
+        src, dst, size = src[idx], dst[idx], size[idx] * scale
+        if modes is not None:
+            modes = modes[idx]
+        n_app = p.max_flows
+
+    bg = sim._bg_flows(allocation)
+    if bg is not None:
+        src_all = np.concatenate([src, bg[0]])
+        dst_all = np.concatenate([dst, bg[1]])
+        size_all = np.concatenate([size, bg[2]])
+    else:
+        src_all, dst_all, size_all = src, dst, size
+    n_all = src_all.shape[0]
+
+    links, is_nonmin = topo.candidate_paths(
+        src_all, dst_all, sim.rng,
+        n_min=p.n_min_candidates, n_nonmin=p.n_nonmin_candidates)
+    valid = links != PAD
+    safe = np.where(valid, links, 0)
+
+    # --- stale & noisy congestion estimate (phantom congestion) --------
+    noise = sim.rng.lognormal(0.0, p.phantom_sigma, size=topo.n_links)
+    ghosts = sim.rng.exponential(p.phantom_ghost_s, size=topo.n_links)
+    a = p.est_staleness
+    est_queue_s = ((1.0 - a) * sim.link_queue_s
+                   + a * sim.est_memory_s) * noise + ghosts
+
+    # --- contention window: the APP phase's clean serialization time ---
+    ser_s_app = float(size[:n_app].max() * p.flit_ns_per_byte) * 1e-9 \
+        if n_app else 0.0
+    window_s = max(ser_s_app, p.min_phase_window_s)
+    cap_bps = topo.capacity_gbs * 1e9
+    nic_ids = topo.nic_link(src_all)
+    inj_cap = topo.capacity_gbs[nic_ids] * 1e9 * window_s
+    size_inst = np.minimum(size_all, inj_cap)
+    packets_all = np.maximum(1, np.ceil(size_all / 64.0))
+    bg_policy = RoutingPolicy(RoutingMode.ADAPTIVE_0)
+
+    def weights_for(extra_queue_s):
+        est = est_queue_s + extra_queue_s
+        sc_app = score_candidates(links[:n_app], est, is_nonmin, policy,
+                                  modes=modes)
+        wa = spray_weights(sc_app, policy, sim.rng,
+                           packets=packets_all[:n_app])
+        if n_all > n_app:
+            sc_bg = score_candidates(links[n_app:], est, is_nonmin,
+                                     bg_policy)
+            wb = spray_weights(sc_bg, bg_policy, sim.rng,
+                               packets=packets_all[n_app:])
+            return np.concatenate([wa, wb], axis=0)
+        return wa
+
+    def loads_for(w):
+        fb = size_inst[:, None, None] * w[:, :, None] * valid
+        li = np.zeros(topo.n_links)
+        np.add.at(li, safe.ravel(), fb.ravel())
+        np.add.at(li, nic_ids, size_inst)
+        return li
+
+    w = weights_for(np.zeros(topo.n_links))
+    load_i = loads_for(w)
+    for _ in range(max(0, p.route_feedback_iters - 1)):
+        rho_fb = load_i / (cap_bps * window_s)
+        extra = np.maximum(0.0, rho_fb - p.feedback_rho0) * window_s
+        w = 0.5 * (w + weights_for(extra))
+        load_i = loads_for(w)
+    w_app = w[:n_app]
+
+    # load_q: full backlog bytes (feeds persistent queues / Fig.3 tails)
+    flow_bytes_q = size_all[:, None, None] * w[:, :, None] * valid
+    load_q = np.zeros(topo.n_links)
+    np.add.at(load_q, safe.ravel(), flow_bytes_q.ravel())
+
+    rho = load_i / (cap_bps * window_s)
+    lat_us, s_flit = _reference_observables(sim, valid, safe, rho, w,
+                                            nic_ids)
+    flits, packets = sim._flits_packets(size_all)
+    win = (packets + MAX_OUTSTANDING_PACKETS // 2) / MAX_OUTSTANDING_PACKETS
+    lat_cycles = lat_us * 1e3 * p.nic_clock_ghz
+    t_cycles = win * lat_cycles + flits * (s_flit + 1.0)
+    t_us = t_cycles / (1e3 * p.nic_clock_ghz)
+    duration_s = max(float(t_us[:n_app].max()) * 1e-6, 1e-7) \
+        if n_app else window_s
+    sim.total_flits_all_jobs += float(flits.sum())
+
+    # --- persistent queues (seconds-to-drain beyond this phase) --------
+    excess_s = np.maximum(0.0, load_q / cap_bps
+                          - max(duration_s, window_s))
+    sim.est_memory_s = (sim.est_memory_s * p.est_memory_decay
+                        + sim.link_queue_s * (1 - p.est_memory_decay))
+    sim.link_queue_s = sim.link_queue_s * p.queue_carryover + excess_s
+    sim.clock_s += duration_s
+
+    # --- NIC counters for the allocation (§2.3) ------------------------
+    app_flits, app_packets = flits[:n_app], packets[:n_app]
+    app_lat, app_stalls = lat_us[:n_app], s_flit[:n_app]
+    if allocation is not None:
+        c = sim.counters.setdefault(allocation.allocation_id,
+                                    NICCounters())
+        c.observe(
+            flits=int(app_flits.sum()),
+            stalled_cycles=int((app_flits * app_stalls).sum()),
+            packets=int(app_packets.sum()),
+            latency_us_total=float((app_lat * app_packets).sum()),
+        )
+
+    nonmin_bytes = float(
+        (size_all[:n_app, None] * w_app * is_nonmin[None, :]).sum())
+    return FlowResult(
+        t_us=t_us[:n_app],
+        latency_us=app_lat,
+        stalls_per_flit=app_stalls,
+        flits=app_flits,
+        packets=app_packets,
+        nonmin_fraction=nonmin_bytes / max(float(size[:n_app].sum()), 1e-9),
+    )
+
+
+def _reference_observables(sim, valid, safe, rho, w, nic_ids):
+    """Per-flow (L_us, s) from per-link utilization (pre-refactor)."""
+    p = sim.params
+    tp = sim.topo.params
+    rho_path = rho[safe] * valid                    # [n, ncand, hops]
+    hops = valid.sum(axis=-1)                       # [n, ncand]
+    excess = np.maximum(0.0, rho_path - p.rho_threshold)
+    qdelay_ns = p.queue_delay_ns * excess.sum(axis=-1)   # [n, ncand]
+    qwait_ns = (sim.link_queue_s[safe] * valid).sum(axis=-1) \
+        * p.qwait_fraction * 1e9
+    lat_ns_cand = 2.0 * tp.nic_latency_ns + hops * tp.hop_latency_ns \
+        + qdelay_ns + qwait_ns
+    lat_us = (lat_ns_cand * w).sum(axis=-1) / 1e3   # weighted over cands
+    rho_nic = rho[nic_ids]                          # [n]
+    rho_bneck = np.maximum(rho_path.max(axis=-1),
+                           rho_nic[:, None])        # [n, ncand]
+    s_cand = p.stall_gain * np.maximum(0.0, rho_bneck - p.rho_threshold)
+    s_flit = (s_cand * w).sum(axis=-1)
+    return lat_us, s_flit

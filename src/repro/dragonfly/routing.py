@@ -59,6 +59,62 @@ def mode_bias_s(mode: RoutingMode, bias_unit_s: float) -> float:
     return b * bias_unit_s
 
 
+# --- int mode codes + bias lookup (the fast path's per-flow bias) ---------
+#: fixed enumeration order backing the int mode-code representation
+MODE_ORDER: tuple = tuple(RoutingMode)
+MODE_CODE: dict = {m: i for i, m in enumerate(MODE_ORDER)}
+
+
+def mode_codes(modes: np.ndarray) -> np.ndarray:
+    """Object array of RoutingModes -> int64 code array (one Python pass
+    per *phase* instead of one set-membership pass per feedback
+    iteration)."""
+    n = len(modes)
+    return np.fromiter((MODE_CODE[m] for m in modes), dtype=np.int64,
+                       count=n)
+
+
+def bias_table_s(bias_unit_s: float) -> np.ndarray:
+    """[n_modes] seconds-of-bias lookup table aligned with MODE_ORDER
+    (deterministic modes keep their raw ±inf sentinel)."""
+    return np.array([mode_bias_s(m, bias_unit_s) for m in MODE_ORDER])
+
+
+def row_bias_terms(n: int, policy: RoutingPolicy,
+                   modes: np.ndarray | None = None):
+    """Loop-invariant per-flow bias decomposition.
+
+    Returns (bias_rows [n] float64, posinf [n] bool, neginf [n] bool):
+    the finite seconds-of-bias charged to non-minimal candidates, and
+    the deterministic-mode masks (±inf sentinels).  Computed once per
+    phase and reused by every feedback iteration.
+    """
+    if modes is None:
+        b = policy.bias_s
+        bias_rows = np.full(n, 0.0 if np.isinf(b) else b)
+        posinf = np.full(n, np.isposinf(b))
+        neginf = np.full(n, np.isneginf(b))
+        return bias_rows, posinf, neginf
+    raw = bias_table_s(policy.bias_unit_s)[mode_codes(modes)]
+    finite = np.isfinite(raw)
+    return (np.where(finite, raw, 0.0), np.isposinf(raw),
+            np.isneginf(raw))
+
+
+def apply_bias(score: np.ndarray, is_nonmin: np.ndarray,
+               bias_rows: np.ndarray, posinf: np.ndarray,
+               neginf: np.ndarray) -> np.ndarray:
+    """Charge the per-flow minimal bias to a [n, ncand] score array."""
+    score = score + np.where(is_nonmin[None, :], bias_rows[:, None], 0.0)
+    if posinf.any():                     # deterministic minimal rows
+        score = np.where(posinf[:, None] & is_nonmin[None, :],
+                         np.inf, score)
+    if neginf.any():                     # deterministic non-minimal rows
+        score = np.where(neginf[:, None] & ~is_nonmin[None, :],
+                         np.inf, score)
+    return score
+
+
 def score_candidates(link_ids: np.ndarray, est_queue_s: np.ndarray,
                      is_nonmin: np.ndarray, policy: RoutingPolicy,
                      modes: np.ndarray | None = None) -> np.ndarray:
@@ -70,6 +126,11 @@ def score_candidates(link_ids: np.ndarray, est_queue_s: np.ndarray,
                  given, each flow is biased by its own mode (the
                  PolicyEngine path: one batched call per phase, mixed
                  modes welcome).  Without it, policy.mode biases all rows.
+
+    The simulator's fast path does not call this per feedback iteration
+    any more — it hoists the (queue gather + hop latency + bias) base via
+    row_bias_terms/apply_bias and only re-adds the iteration's `extra`
+    term; this function remains the one-shot scoring entry point.
     """
     valid = link_ids != PAD
     safe = np.where(valid, link_ids, 0)
@@ -85,24 +146,8 @@ def score_candidates(link_ids: np.ndarray, est_queue_s: np.ndarray,
         else:
             score = score + np.where(is_nonmin[None, :], bias, 0.0)
         return score
-    # --- per-flow modes: one masked pass per UNIQUE mode (<= 7) ----------
-    n = score.shape[0]
-    bias_rows = np.zeros(n)
-    posinf = np.zeros(n, dtype=bool)
-    neginf = np.zeros(n, dtype=bool)
-    for mode in {m for m in modes}:
-        rows = modes == mode
-        b = mode_bias_s(mode, policy.bias_unit_s)
-        if np.isposinf(b):
-            posinf |= rows
-        elif np.isneginf(b):
-            neginf |= rows
-        else:
-            bias_rows[rows] = b
-    score = score + np.where(is_nonmin[None, :], bias_rows[:, None], 0.0)
-    score = np.where(posinf[:, None] & is_nonmin[None, :], np.inf, score)
-    score = np.where(neginf[:, None] & ~is_nonmin[None, :], np.inf, score)
-    return score
+    return apply_bias(score, is_nonmin,
+                      *row_bias_terms(score.shape[0], policy, modes))
 
 
 def spray_weights(scores: np.ndarray, policy: RoutingPolicy,
@@ -119,21 +164,43 @@ def spray_weights(scores: np.ndarray, policy: RoutingPolicy,
     selection: each packet draws its own noisy estimate, so a message of
     `packets` packets realizes the softmin distribution with ~1/sqrt(p)
     relative error — a single-packet message takes exactly one path, a
-    64k-packet message matches the distribution almost exactly."""
+    64k-packet message matches the distribution almost exactly.
+
+    When `rng is None` the scores go straight into the softmin — no
+    copy, no noise machinery (this runs 4x per phase on the bg arm)."""
     t = max(policy.spray_temperature_s, 1e-12)
-    s = scores.copy()
+    noise = scale = None
     if rng is not None:
+        noise = rng.gumbel(0.0, 1.0, size=scores.shape)
         scale = t * 0.9
         if packets is not None:
             scale = scale / np.sqrt(np.maximum(packets, 1.0))[:, None]
-        s = s + rng.gumbel(0.0, 1.0, size=s.shape) * scale
+    return softmin_weights(scores, t, noise=noise, noise_scale=scale)
+
+
+def softmin_weights(scores: np.ndarray, temperature,
+                    noise: np.ndarray | None = None,
+                    noise_scale=None) -> np.ndarray:
+    """softmin(scores / T) with optional pre-drawn additive noise.
+
+    `temperature` is a scalar or a per-row [n] / [n, 1] array (the fused
+    fast path sprays app + background flows, whose policies may carry
+    different temperatures, in ONE call).  Inf/NaN scrubbing is a single
+    pass on the score side: a +inf score exponentiates to an exact 0.0
+    weight, so the exp output needs no second scrub.
+    """
+    t = np.asarray(temperature)
+    if t.ndim == 1:
+        t = t[:, None]
+    s = scores
+    if noise is not None:
+        s = s + noise * noise_scale
     s = np.where(np.isfinite(s), s, np.inf)
     smin = s.min(axis=1, keepdims=True)
     # rows with no usable candidate (all inf): shift by 0 instead of inf
     # so exp(-inf) cleanly zeroes them without inf-inf NaN warnings
     smin = np.where(np.isfinite(smin), smin, 0.0)
     z = np.exp(-(s - smin) / t)
-    z = np.where(np.isfinite(z), z, 0.0)
     tot = z.sum(axis=1, keepdims=True)
     tot = np.where(tot <= 0, 1.0, tot)
     return z / tot

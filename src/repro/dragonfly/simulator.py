@@ -20,10 +20,34 @@ ping-pong direction).  For each phase the simulator:
 
 Background ("other job") traffic with Pareto-sized flows shares the links,
 producing the heavy outlier tails of Fig. 3.  All randomness is seeded.
+
+Fast path (PR 3, docs/performance.md): the hot loop is vectorized —
+
+  * link loads are np.bincount segment-sums over pre-flattened valid
+    (link, byte) pairs instead of buffered ``np.add.at`` scatter-adds;
+  * the loop-invariant score base (queue gather + hop latency + per-flow
+    bias via an int mode-code table) is hoisted out of the
+    ``route_feedback_iters`` fixed point — each iteration only adds the
+    feedback ``extra`` term and re-sprays;
+  * app + background flows spray in ONE fused softmin call per iteration
+    (per-row temperatures), with the whole phase's Gumbel noise drawn
+    up-front from the same RNG stream;
+  * repeated traffic patterns can reuse a :class:`PhasePlan` (candidate
+    tensor, validity masks, NIC ids, packet counts) via
+    ``sim.plan_for(...)`` / ``run_phase(..., plan=...)``;
+  * ``SimParams.backend = "jax"`` routes the score->spray->fixed-point->
+    observables pipeline through one jitted JAX function (with a Pallas
+    segment-sum kernel on TPU), falling back to NumPy when unavailable.
+
+Seed-for-seed the NumPy fast path replays the pre-refactor simulator
+(`repro.dragonfly.reference`): bit-identical with
+``route_feedback_iters=1`` and within ~1e-9 relative otherwise (the
+hoisted ``extra`` term reassociates one float64 sum per iteration).
 """
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -31,8 +55,12 @@ import numpy as np
 from repro.core.counters import NICCounters
 from repro.core.perf_model import MAX_OUTSTANDING_PACKETS
 from repro.core.strategies import RoutingMode
-from repro.dragonfly.routing import RoutingPolicy, score_candidates, spray_weights
+from repro.dragonfly.routing import (RoutingPolicy, apply_bias,
+                                     row_bias_terms, softmin_weights)
 from repro.dragonfly.topology import PAD, Allocation, DragonflyTopology
+
+#: simulator compute backends (SimParams.backend)
+BACKENDS = ("numpy", "jax")
 
 
 @dataclass(frozen=True)
@@ -88,6 +116,12 @@ class SimParams:
     host_overhead_us: float = 1.5
     host_noise_sigma: float = 0.25     # lognormal sigma of host-side jitter
     nic_clock_ghz: float = 1.0
+    #: compute backend for the phase kernel: "numpy" (default, seed-exact)
+    #: or "jax" (jitted pipeline + Pallas segment-sum on TPU; falls back to
+    #: numpy with a warning when jax is unusable).  docs/performance.md.
+    backend: str = "numpy"
+    #: accumulate per-stage wall times into sim.stage_time_s (perf_sim.py)
+    profile_stages: bool = False
 
 
 @dataclass
@@ -106,9 +140,69 @@ class FlowResult:
         return float(self.t_us.max()) if self.t_us.size else 0.0
 
 
+def _pair_compress(links: np.ndarray, valid: np.ndarray):
+    """Flatten the PAD-padded [n, ncand, hops] candidate-link tensor into
+    the fast path's (link, flow-candidate) pair lists.
+
+    Returns (pair_links [P], pair_fc [P]): for every *valid* hop entry,
+    the link id and the flat ``flow * ncand + cand`` index whose spray
+    weight scales the bytes offered to that link.  ``np.bincount`` over
+    these pairs is the segment-sum replacing ``np.add.at`` — skipping
+    the PAD zero-contributions keeps the per-bin accumulation order (and
+    therefore the float64 sums) bit-identical.
+    """
+    idx = np.flatnonzero(valid.ravel())
+    return links.ravel()[idx], idx // links.shape[2]
+
+
+@dataclass
+class PhasePlan:
+    """Precomputed, reusable tensors for one app traffic pattern.
+
+    Repeated collective rounds (fig7/fig8/fig10 ping-pong & alltoall,
+    train/serve step loops) re-send the same (src, dst, bytes) pattern
+    every iteration; a plan freezes everything ``run_phase`` would
+    otherwise rebuild per call: the candidate-path draw, validity masks,
+    the bincount pair lists, NIC ids and packet counts.
+
+    Reuse contract (docs/performance.md): a plan's candidate paths (and,
+    for oversized phases, the statistical subsample) are drawn ONCE from
+    the simulator RNG at plan creation and then FROZEN — replaying a
+    plan consumes fewer RNG draws than planless calls, so plan-reused
+    runs are seeded-deterministic but not draw-for-draw identical to
+    planless ones.  Background traffic, phantom noise and spray noise
+    stay fresh per phase.  Plans are immutable and topology-bound; they
+    may be shared across policies/modes but not across simulators with
+    different topologies.
+    """
+
+    src: np.ndarray             # [n] app flow sources (post-subsample)
+    dst: np.ndarray
+    size: np.ndarray            # [n] bytes (subsample-scaled)
+    n_flows_in: int             # flow count the plan was built from
+    subsample_idx: np.ndarray | None   # rows kept when n_flows_in > cap
+    links: np.ndarray           # [n, ncand, hops] PAD-padded link ids
+    valid: np.ndarray
+    safe: np.ndarray
+    hops: np.ndarray            # [n, ncand]
+    is_nonmin: np.ndarray       # [ncand]
+    pair_links: np.ndarray
+    pair_fc: np.ndarray
+    nic_ids: np.ndarray         # [n] injection link per flow
+    packets: np.ndarray         # [n] request packets per flow
+    ser_s_app: float            # clean serialization time of largest msg
+
+    @property
+    def n_flows(self) -> int:
+        return int(self.src.shape[0])
+
+
 class DragonflySimulator:
     def __init__(self, topo: DragonflyTopology,
                  params: SimParams = SimParams()):
+        if params.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {params.backend!r}; "
+                             f"expected one of {BACKENDS}")
         self.topo = topo
         self.params = params
         self.rng = np.random.default_rng(params.seed)
@@ -122,6 +216,9 @@ class DragonflySimulator:
             topo.params.n_groups,
             size=min(params.bg_hot_groups, topo.params.n_groups),
             replace=False)
+        self._plan_cache: dict = {}
+        #: accumulated per-stage wall time (params.profile_stages)
+        self.stage_time_s: dict[str, float] = {}
 
     # --------------------------------------------------------- counter API
     def backend_for(self, allocation_id: str):
@@ -138,6 +235,11 @@ class DragonflySimulator:
         return _Backend()
 
     # ------------------------------------------------------------- internals
+    def _stage(self, name: str, t0: float) -> float:
+        t1 = time.perf_counter()
+        self.stage_time_s[name] = self.stage_time_s.get(name, 0.0) + t1 - t0
+        return t1
+
     def _bg_flows(self, allocation: Allocation | None = None):
         p = self.params
         n = p.bg_flows_per_phase
@@ -152,8 +254,12 @@ class DragonflySimulator:
         nodes_per_group = tp.routers_per_group * tp.nodes_per_blade
         ours = np.asarray(allocation.nodes) if allocation is not None \
             else np.empty(0, dtype=np.int64)
+        # nodes outside the allocation (the disjointness fallback pool);
+        # empty only in the degenerate whole-machine-allocation case
+        free = None
 
         def draw(size):
+            nonlocal free
             hot = self.rng.random(size) < p.bg_hot_prob
             grp = np.where(
                 hot,
@@ -162,17 +268,35 @@ class DragonflySimulator:
             off = self.rng.integers(0, nodes_per_group, size=size)
             out = grp * nodes_per_group + off
             # batch systems do not share nodes between jobs: other-job flows
-            # never originate/terminate on the allocation's nodes
+            # never originate/terminate on the allocation's nodes.  Resample
+            # to DISJOINTNESS (bounded, seeded): a few general redraws, then
+            # any survivor is drawn from the complement directly, so overlap
+            # cannot silently persist (pre-PR-3 bug: 3 retries then give up)
             for _ in range(3):
                 bad = np.isin(out, ours)
                 if not bad.any():
-                    break
+                    return out
                 out[bad] = self.rng.integers(0, tp.n_nodes, size=bad.sum())
+            bad = np.isin(out, ours)
+            if bad.any():
+                if free is None:
+                    free = np.setdiff1d(np.arange(tp.n_nodes), ours)
+                if free.size:
+                    out[bad] = self.rng.choice(free, size=bad.sum())
             return out
 
         src = draw(n)
         dst = draw(n)
         dst = np.where(dst == src, (dst + 1) % tp.n_nodes, dst)
+        # the +1 shift above can re-land on the allocation (or on src):
+        # walk forward deterministically until outside both (no RNG draws,
+        # so the stream matches the pre-fix code whenever it was correct)
+        bad = np.isin(dst, ours) | (dst == src)
+        for _ in range(int(tp.n_nodes)):
+            if not bad.any():
+                break
+            dst = np.where(bad, (dst + 1) % tp.n_nodes, dst)
+            bad = np.isin(dst, ours) | (dst == src)
         size = (self.rng.pareto(p.bg_pareto_alpha, size=n) + 1.0) \
             * p.bg_bytes_scale
         return src, dst, size
@@ -183,50 +307,157 @@ class DragonflySimulator:
         flits = packets * 5.0  # PUT: 1 header + 4 payload flits
         return flits, packets
 
+    # --------------------------------------------------------------- plans
+    def make_plan(self, src_nodes, dst_nodes, bytes_) -> PhasePlan:
+        """Build a reusable PhasePlan for one app traffic pattern.
+
+        Consumes RNG draws for the candidate paths (and the statistical
+        subsample if the phase exceeds ``max_flows``) exactly once; see
+        the PhasePlan reuse contract."""
+        p = self.params
+        src = np.asarray(src_nodes, dtype=np.int64)
+        dst = np.asarray(dst_nodes, dtype=np.int64)
+        size = np.asarray(bytes_, dtype=np.float64)
+        n_in = int(src.shape[0])
+        sub_idx = None
+        if n_in > p.max_flows:
+            sub_idx = self.rng.choice(n_in, size=p.max_flows, replace=False)
+            scale = n_in / p.max_flows
+            src, dst, size = src[sub_idx], dst[sub_idx], size[sub_idx] * scale
+        links, is_nonmin = self.topo.candidate_paths(
+            src, dst, self.rng,
+            n_min=p.n_min_candidates, n_nonmin=p.n_nonmin_candidates)
+        valid = links != PAD
+        pair_links, pair_fc = _pair_compress(links, valid)
+        return PhasePlan(
+            src=src, dst=dst, size=size, n_flows_in=n_in,
+            subsample_idx=sub_idx,
+            links=links, valid=valid, safe=np.where(valid, links, 0),
+            hops=valid.sum(axis=-1), is_nonmin=is_nonmin,
+            pair_links=pair_links, pair_fc=pair_fc,
+            nic_ids=np.asarray(self.topo.nic_link(src)),
+            packets=np.maximum(1, np.ceil(size / 64.0)),
+            ser_s_app=(float(size.max() * p.flit_ns_per_byte) * 1e-9
+                       if size.size else 0.0),
+        )
+
+    def plan_for(self, src_nodes, dst_nodes, bytes_) -> PhasePlan:
+        """Content-addressed plan cache: repeated (src, dst, bytes)
+        patterns get one shared PhasePlan per simulator."""
+        import hashlib
+
+        src = np.asarray(src_nodes, dtype=np.int64)
+        dst = np.asarray(dst_nodes, dtype=np.int64)
+        size = np.asarray(bytes_, dtype=np.float64)
+        h = hashlib.sha1()
+        for a in (src, dst, size):
+            h.update(a.tobytes())
+        key = h.digest()
+        plan = self._plan_cache.get(key)
+        if plan is None:
+            if len(self._plan_cache) >= 64:     # bounded: drop the oldest
+                self._plan_cache.pop(next(iter(self._plan_cache)))
+            plan = self._plan_cache[key] = self.make_plan(src, dst, size)
+        return plan
+
     # ------------------------------------------------------------- run_phase
     def run_phase(self, src_nodes, dst_nodes, bytes_, policy: RoutingPolicy,
                   allocation: Allocation | None = None,
-                  modes: np.ndarray | None = None) -> FlowResult:
+                  modes: np.ndarray | None = None,
+                  plan: PhasePlan | None = None) -> FlowResult:
         """Simulate one phase of concurrent flows routed with `policy`.
 
         `modes` (optional, [n_app] object array of RoutingModes) is the
         PolicyEngine path: per-flow modes from one vectorized
         engine.decide() call bias each flow individually; `policy` then
-        only supplies the calibration constants (bias_unit_s etc.)."""
+        only supplies the calibration constants (bias_unit_s etc.).
+
+        `plan` (optional) replays a precomputed PhasePlan for the app
+        flows (src/dst/bytes args are then ignored); candidate paths are
+        not redrawn — see the PhasePlan reuse contract."""
         p = self.params
         topo = self.topo
-        src = np.asarray(src_nodes, dtype=np.int64)
-        dst = np.asarray(dst_nodes, dtype=np.int64)
-        size = np.asarray(bytes_, dtype=np.float64)
-        n_app = src.shape[0]
-        if modes is not None and np.shape(modes)[0] != n_app:
-            raise ValueError("modes must have one entry per app flow")
+        prof = p.profile_stages
+        t0 = time.perf_counter() if prof else 0.0
+
+        # --- app flows: from the plan, or validated + subsampled fresh ----
+        if plan is not None:
+            if modes is not None and np.shape(modes)[0] != plan.n_flows_in:
+                raise ValueError("modes must have one entry per app flow")
+            if modes is not None and plan.subsample_idx is not None:
+                modes = modes[plan.subsample_idx]
+            src, dst, size = plan.src, plan.dst, plan.size
+            n_app = plan.n_flows
+        else:
+            src = np.asarray(src_nodes, dtype=np.int64)
+            dst = np.asarray(dst_nodes, dtype=np.int64)
+            size = np.asarray(bytes_, dtype=np.float64)
+            n_app = src.shape[0]
+            if modes is not None and np.shape(modes)[0] != n_app:
+                raise ValueError("modes must have one entry per app flow")
+            if n_app > p.max_flows:
+                idx = self.rng.choice(n_app, size=p.max_flows, replace=False)
+                scale = n_app / p.max_flows
+                src, dst, size = src[idx], dst[idx], size[idx] * scale
+                if modes is not None:
+                    modes = modes[idx]
+                n_app = p.max_flows
         if n_app == 0 and not (p.bg_enable and p.bg_flows_per_phase):
             return FlowResult(*(np.zeros(0),) * 5, 0.0)
 
-        # statistical subsample of very large phases (load-preserving)
-        if n_app > p.max_flows:
-            idx = self.rng.choice(n_app, size=p.max_flows, replace=False)
-            scale = n_app / p.max_flows
-            src, dst, size = src[idx], dst[idx], size[idx] * scale
-            if modes is not None:
-                modes = modes[idx]
-            n_app = p.max_flows
-
         bg = self._bg_flows(allocation)
-        if bg is not None:
-            src_all = np.concatenate([src, bg[0]])
-            dst_all = np.concatenate([dst, bg[1]])
-            size_all = np.concatenate([size, bg[2]])
-        else:
-            src_all, dst_all, size_all = src, dst, size
-        n_all = src_all.shape[0]
 
-        links, is_nonmin = topo.candidate_paths(
-            src_all, dst_all, self.rng,
-            n_min=p.n_min_candidates, n_nonmin=p.n_nonmin_candidates)
-        valid = links != PAD
-        safe = np.where(valid, links, 0)
+        # --- candidate tensors (planless: one joint draw, as pre-refactor;
+        #     plan: frozen app tensors + a fresh draw for the bg flows) ----
+        if plan is None:
+            if bg is not None:
+                src_all = np.concatenate([src, bg[0]])
+                size_all = np.concatenate([size, bg[2]])
+                dst_all = np.concatenate([dst, bg[1]])
+            else:
+                src_all, dst_all, size_all = src, dst, size
+            links, is_nonmin = topo.candidate_paths(
+                src_all, dst_all, self.rng,
+                n_min=p.n_min_candidates, n_nonmin=p.n_nonmin_candidates)
+            valid = links != PAD
+            safe = np.where(valid, links, 0)
+            hops = valid.sum(axis=-1)
+            pair_links, pair_fc = _pair_compress(links, valid)
+            nic_ids = np.asarray(topo.nic_link(src_all))
+            packets_all = np.maximum(1, np.ceil(size_all / 64.0))
+            ser_s_app = float(size[:n_app].max() * p.flit_ns_per_byte) \
+                * 1e-9 if n_app else 0.0
+        else:
+            is_nonmin = plan.is_nonmin
+            ser_s_app = plan.ser_s_app
+            if bg is not None:
+                bg_links, _ = topo.candidate_paths(
+                    bg[0], bg[1], self.rng,
+                    n_min=p.n_min_candidates, n_nonmin=p.n_nonmin_candidates)
+                bg_valid = bg_links != PAD
+                bg_pl, bg_fc = _pair_compress(bg_links, bg_valid)
+                ncand = bg_links.shape[1]
+                valid = np.concatenate([plan.valid, bg_valid])
+                safe = np.concatenate(
+                    [plan.safe, np.where(bg_valid, bg_links, 0)])
+                hops = np.concatenate([plan.hops, bg_valid.sum(axis=-1)])
+                pair_links = np.concatenate([plan.pair_links, bg_pl])
+                pair_fc = np.concatenate(
+                    [plan.pair_fc, bg_fc + n_app * ncand])
+                size_all = np.concatenate([size, bg[2]])
+                nic_ids = np.concatenate(
+                    [plan.nic_ids, np.asarray(topo.nic_link(bg[0]))])
+                packets_all = np.concatenate(
+                    [plan.packets, np.maximum(1, np.ceil(bg[2] / 64.0))])
+            else:
+                valid, safe, hops = plan.valid, plan.safe, plan.hops
+                pair_links, pair_fc = plan.pair_links, plan.pair_fc
+                size_all, nic_ids = size, plan.nic_ids
+                packets_all = plan.packets
+        n_all = safe.shape[0]
+        ncand = safe.shape[1]
+        if prof:
+            t0 = self._stage("candidates", t0)
 
         # --- stale & noisy congestion estimate (phantom congestion) --------
         noise = self.rng.lognormal(0.0, p.phantom_sigma, size=topo.n_links)
@@ -238,60 +469,67 @@ class DragonflySimulator:
         # --- contention window: the APP phase's clean serialization time ---
         # (stall-free flit serialization of the largest app message; floored
         # so transient small messages do not self-congest)
-        ser_s_app = float(size[:n_app].max() * p.flit_ns_per_byte) * 1e-9 \
-            if n_app else 0.0
         window_s = max(ser_s_app, p.min_phase_window_s)
         cap_bps = topo.capacity_gbs * 1e9
-        nic_ids = topo.nic_link(src_all)
         inj_cap = topo.capacity_gbs[nic_ids] * 1e9 * window_s
         size_inst = np.minimum(size_all, inj_cap)
-        packets_all = np.maximum(1, np.ceil(size_all / 64.0))
         bg_policy = RoutingPolicy(RoutingMode.ADAPTIVE_0)
 
-        def weights_for(extra_queue_s):
-            est = est_queue_s + extra_queue_s
-            sc_app = score_candidates(links[:n_app], est, is_nonmin, policy,
-                                      modes=modes)
-            wa = spray_weights(sc_app, policy, self.rng,
-                               packets=packets_all[:n_app])
-            if n_all > n_app:
-                sc_bg = score_candidates(links[n_app:], est, is_nonmin,
-                                         bg_policy)
-                wb = spray_weights(sc_bg, bg_policy, self.rng,
-                                   packets=packets_all[n_app:])
-                return np.concatenate([wa, wb], axis=0)
-            return wa
+        # --- loop-invariant score base + fused per-row spray constants -----
+        # (queue gather + hop latency + bias hoisted OUT of the feedback
+        # loop; per-flow modes become one int-code bias lookup per phase)
+        bias_rows, posinf, neginf = row_bias_terms(n_app, policy, modes)
+        hl_rows = np.full(n_app, policy.hop_latency_s)
+        t_rows = np.full(n_app, max(policy.spray_temperature_s, 1e-12))
+        if n_all > n_app:
+            n_bg = n_all - n_app
+            bb, bp_, bn = row_bias_terms(n_bg, bg_policy)
+            bias_rows = np.concatenate([bias_rows, bb])
+            posinf = np.concatenate([posinf, bp_])
+            neginf = np.concatenate([neginf, bn])
+            hl_rows = np.concatenate(
+                [hl_rows, np.full(n_bg, bg_policy.hop_latency_s)])
+            t_rows = np.concatenate(
+                [t_rows,
+                 np.full(n_bg, max(bg_policy.spray_temperature_s, 1e-12))])
+        base = (est_queue_s[safe] * valid).sum(axis=-1) \
+            + hl_rows[:, None] * hops
+        score0 = apply_bias(base, is_nonmin, bias_rows, posinf, neginf)
+        noise_scale = (t_rows * 0.9)[:, None] \
+            / np.sqrt(np.maximum(packets_all, 1.0))[:, None]
+        # whole-phase spray noise, drawn up-front: one (iters, n, ncand)
+        # block consumes the stream exactly like the per-iteration
+        # app-then-bg draws did (Gumbel is one double per variate)
+        n_spray = max(1, p.route_feedback_iters)
+        gnoise = self.rng.gumbel(0.0, 1.0, size=(n_spray, n_all, ncand))
+        nic_load = np.bincount(nic_ids, weights=size_inst,
+                               minlength=topo.n_links)
+        if prof:
+            t0 = self._stage("estimate", t0)
 
-        def loads_for(w):
-            # load_i: bytes offered DURING the window (a flow cannot inject
-            # more than its NIC moves in the window) -> instant contention
-            fb = size_inst[:, None, None] * w[:, :, None] * valid
-            li = np.zeros(topo.n_links)
-            np.add.at(li, safe.ravel(), fb.ravel())
-            np.add.at(li, nic_ids, size_inst)
-            return li
-
-        # within-phase adaptive feedback: later packets see queues built by
-        # earlier ones and re-equilibrate (per-packet real-time sensing).
-        # Damped (w <- (w + w_target)/2) to avoid synchronous flip-flopping.
-        w = weights_for(np.zeros(topo.n_links))
-        load_i = loads_for(w)
-        for _ in range(max(0, p.route_feedback_iters - 1)):
-            rho_fb = load_i / (cap_bps * window_s)
-            extra = np.maximum(0.0, rho_fb - p.feedback_rho0) * window_s
-            w = 0.5 * (w + weights_for(extra))
-            load_i = loads_for(w)
+        # --- fixed point + observables (backend-dispatched) ----------------
+        kernel = self._fixed_point_numpy
+        if p.backend == "jax":
+            from repro.compat.runtime import resolve_backend
+            if resolve_backend(p.backend) == "jax":
+                from repro.dragonfly.jax_backend import fixed_point_jax
+                kernel = fixed_point_jax
+        w, rho, load_q, lat_us, s_flit = kernel(
+            self, score0=score0, safe=safe, valid=valid, hops=hops,
+            est_queue_s=est_queue_s, hl_rows=hl_rows, is_nonmin=is_nonmin,
+            bias_rows=bias_rows, posinf=posinf, neginf=neginf,
+            t_rows=t_rows, noise_scale=noise_scale, gnoise=gnoise,
+            size_inst=size_inst, size_all=size_all,
+            pair_links=pair_links, pair_fc=pair_fc, nic_load=nic_load,
+            nic_ids=nic_ids, cap_window=cap_bps * window_s,
+            window_s=window_s)
         w_app = w[:n_app]
+        if prof:
+            t0 = self._stage("fixed_point", t0)
 
-        # load_q: full backlog bytes (feeds persistent queues / Fig.3 tails)
-        flow_bytes_q = size_all[:, None, None] * w[:, :, None] * valid
-        load_q = np.zeros(topo.n_links)
-        np.add.at(load_q, safe.ravel(), flow_bytes_q.ravel())
-
-        rho = load_i / (cap_bps * window_s)
-        lat_us, s_flit = self._observables(valid, safe, rho, w, nic_ids)
         flits, packets = self._flits_packets(size_all)
-        win = (packets + MAX_OUTSTANDING_PACKETS // 2) / MAX_OUTSTANDING_PACKETS
+        win = (packets + MAX_OUTSTANDING_PACKETS // 2) \
+            / MAX_OUTSTANDING_PACKETS
         lat_cycles = lat_us * 1e3 * p.nic_clock_ghz
         t_cycles = win * lat_cycles + flits * (s_flit + 1.0)
         t_us = t_cycles / (1e3 * p.nic_clock_ghz)
@@ -324,6 +562,8 @@ class DragonflySimulator:
 
         nonmin_bytes = float(
             (size_all[:n_app, None] * w_app * is_nonmin[None, :]).sum())
+        if prof:
+            self._stage("finalize", t0)
         return FlowResult(
             t_us=t_us[:n_app],
             latency_us=app_lat,
@@ -333,31 +573,121 @@ class DragonflySimulator:
             nonmin_fraction=nonmin_bytes / max(float(size[:n_app].sum()), 1e-9),
         )
 
-    def _observables(self, valid, safe, rho, w, nic_ids):
-        """Per-flow (L_us, s) from per-link utilization."""
+    # ----------------------------------------------------- numpy fixed point
+    @staticmethod
+    def _fixed_point_numpy(sim, *, score0, safe, valid, hops, est_queue_s,
+                           hl_rows, is_nonmin, bias_rows, posinf, neginf,
+                           t_rows, noise_scale, gnoise, size_inst,
+                           size_all, pair_links, pair_fc, nic_load,
+                           nic_ids, cap_window, window_s):
+        """Spray/feedback fixed point + observables, NumPy backend.
+
+        Within-phase adaptive feedback: later packets see queues built by
+        earlier ones and re-equilibrate (per-packet real-time sensing).
+        Damped (w <- (w + w_target)/2) to avoid synchronous flip-flopping.
+        """
+        p = sim.params
+        n_links = sim.topo.n_links
+
+        def loads(w):
+            # bytes offered DURING the window (a flow cannot inject more
+            # than its NIC moves in the window) -> instant contention
+            vals = (size_inst[:, None] * w).ravel()[pair_fc]
+            return np.bincount(pair_links, weights=vals,
+                               minlength=n_links) + nic_load
+
+        w = softmin_weights(score0, t_rows, gnoise[0], noise_scale)
+        load_i = loads(w)
+        for it in range(1, gnoise.shape[0]):
+            rho_fb = load_i / cap_window
+            extra = np.maximum(0.0, rho_fb - p.feedback_rho0) * window_s
+            # `extra` is nonzero only on links past feedback_rho0: every
+            # row not touching one keeps its hoisted base score (est + 0.0
+            # is bitwise est), and only the rows that DO are re-gathered
+            # with the combined (est + extra) estimate — the same float64
+            # accumulation the unhoisted scorer performs, so the fast
+            # path stays bit-identical even in congested phases
+            sel = (extra != 0.0)[pair_links]
+            if sel.any():
+                ncand = score0.shape[1]
+                rows = np.unique(pair_fc[sel] // ncand)
+                est_it = est_queue_s + extra
+                hot = (est_it[safe[rows]] * valid[rows]).sum(axis=-1) \
+                    + hl_rows[rows][:, None] * hops[rows]
+                score = score0.copy()
+                score[rows] = apply_bias(hot, is_nonmin, bias_rows[rows],
+                                         posinf[rows], neginf[rows])
+            else:
+                score = score0
+            w = 0.5 * (w + softmin_weights(score, t_rows, gnoise[it],
+                                           noise_scale))
+            load_i = loads(w)
+
+        # load_q: full backlog bytes (feeds persistent queues/Fig.3 tails)
+        vals_q = (size_all[:, None] * w).ravel()[pair_fc]
+        load_q = np.bincount(pair_links, weights=vals_q, minlength=n_links)
+        rho = load_i / cap_window
+        lat_us, s_flit = sim._observables(valid, safe, rho, w, nic_ids,
+                                          hops=hops, pair_links=pair_links,
+                                          pair_fc=pair_fc)
+        return w, rho, load_q, lat_us, s_flit
+
+    def _observables(self, valid, safe, rho, w, nic_ids, *,
+                     hops=None, pair_links=None, pair_fc=None):
+        """Per-flow (L_us, s) from per-link utilization.
+
+        With the fast path's pair lists, the congested-link terms
+        (queuing-delay excess, persistent-queue waits, bottleneck
+        stalls) are evaluated sparsely: only links past the thresholds
+        contribute, and skipping their exact-0.0 terms leaves every
+        float64 accumulation bit-identical to the dense gathers."""
         p = self.params
         tp = self.topo.params
-        rho_path = rho[safe] * valid                    # [n, ncand, hops]
-        hops = valid.sum(axis=-1)                       # [n, ncand]
-        excess = np.maximum(0.0, rho_path - p.rho_threshold)
-        qdelay_ns = p.queue_delay_ns * excess.sum(axis=-1)   # [n, ncand]
+        n, ncand = w.shape
+        if hops is None:
+            hops = valid.sum(axis=-1)                   # [n, ncand]
+        if pair_links is None:
+            # safe == links on the valid entries _pair_compress keeps
+            pair_links, pair_fc = _pair_compress(safe, valid)
+        hot_pairs = (rho > p.rho_threshold)[pair_links]
+        any_hot = bool(hot_pairs.any())
+        rho_nic = rho[nic_ids]                          # [n]
+        nic_hot = rho_nic > p.rho_threshold
+        qdelay_sum = np.zeros((n, ncand))
+        s_flit = np.zeros(n)
+        if any_hot or nic_hot.any():
+            # union of rows whose path or NIC crosses rho_threshold: the
+            # only rows with nonzero queuing-delay excess or stalls —
+            # everyone else's terms are exact 0.0s, so the dense hop
+            # gather/max runs on this (usually small) subset only
+            rows = np.unique(np.concatenate(
+                [pair_fc[hot_pairs] // ncand, np.flatnonzero(nic_hot)])) \
+                if any_hot else np.flatnonzero(nic_hot)
+            rho_path = rho[safe[rows]] * valid[rows]    # [k, ncand, hops]
+            excess = np.maximum(0.0, rho_path - p.rho_threshold)
+            qdelay_sum[rows] = excess.sum(axis=-1)
+            rho_bneck = np.maximum(rho_path.max(axis=-1),
+                                   rho_nic[rows][:, None])   # [k, ncand]
+            s_cand = p.stall_gain * np.maximum(
+                0.0, rho_bneck - p.rho_threshold)
+            s_flit[rows] = (s_cand * w[rows]).sum(axis=-1)
+        qdelay_ns = p.queue_delay_ns * qdelay_sum       # [n, ncand]
         # waiting behind queues persisting from earlier traffic: a packet
         # entering a link with q seconds-to-drain of backlog waits ~q
         # (discounted: spraying interleaves it into the backlog).  This is
         # THE outlier mechanism of Fig. 3 — and what adaptive routing dodges
         # when its congestion estimate is fresh.
-        qwait_ns = (self.link_queue_s[safe] * valid).sum(axis=-1) \
-            * p.qwait_fraction * 1e9
+        lq = self.link_queue_s
+        lq_pairs = (lq != 0.0)[pair_links]
+        qwait_sum = np.zeros((n, ncand))
+        if lq_pairs.any():
+            rows_q = np.unique(pair_fc[lq_pairs] // ncand)
+            qwait_sum[rows_q] = (lq[safe[rows_q]]
+                                 * valid[rows_q]).sum(axis=-1)
+        qwait_ns = qwait_sum * p.qwait_fraction * 1e9
         lat_ns_cand = 2.0 * tp.nic_latency_ns + hops * tp.hop_latency_ns \
             + qdelay_ns + qwait_ns
         lat_us = (lat_ns_cand * w).sum(axis=-1) / 1e3   # weighted over cands
-        # stall ratio from the bottleneck link of each candidate path,
-        # including the NIC injection link
-        rho_nic = rho[nic_ids]                          # [n]
-        rho_bneck = np.maximum(rho_path.max(axis=-1),
-                               rho_nic[:, None])        # [n, ncand]
-        s_cand = p.stall_gain * np.maximum(0.0, rho_bneck - p.rho_threshold)
-        s_flit = (s_cand * w).sum(axis=-1)
         return lat_us, s_flit
 
     # ----------------------------------------------------------------- misc

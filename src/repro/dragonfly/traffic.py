@@ -178,14 +178,23 @@ class IterationResult:
 
 def run_iteration(sim: DragonflySimulator, alloc: Allocation,
                   phases: Sequence[Phase],
-                  policy: RoutingPolicy) -> IterationResult:
-    """One benchmark iteration under a fixed routing mode."""
+                  policy: RoutingPolicy, *,
+                  use_plans: bool = False) -> IterationResult:
+    """One benchmark iteration under a fixed routing mode.
+
+    `use_plans=True` routes each phase through the simulator's
+    content-addressed PhasePlan cache, so iteration loops stop redrawing
+    candidate paths for identical traffic (see the reuse contract in
+    docs/performance.md — seeded-deterministic, but a different RNG
+    consumption than planless runs)."""
     total_us = 0.0
     lat, st, nmf, wts = [], [], [], []
     host_rng = sim.rng
     for (s, d, b) in phases:
         nodes = np.asarray(alloc.nodes)
-        res = sim.run_phase(nodes[s], nodes[d], b, policy, alloc)
+        plan = sim.plan_for(nodes[s], nodes[d], b) if use_plans else None
+        res = sim.run_phase(nodes[s], nodes[d], b, policy, alloc,
+                            plan=plan)
         host = sim.params.host_overhead_us * host_rng.lognormal(
             0.0, sim.params.host_noise_sigma)
         total_us += res.phase_time_us + host
@@ -220,7 +229,8 @@ def run_iteration_engine(sim: DragonflySimulator, alloc: Allocation,
                          phases: Sequence[Phase], engine: PolicyEngine, *,
                          site: str = "default", kind: str = KIND_PT2PT,
                          base_policy: RoutingPolicy | None = None,
-                         counter_read_overhead_us: float = 0.35
+                         counter_read_overhead_us: float = 0.35,
+                         use_plans: bool = False
                          ) -> IterationResult:
     """One iteration with a PolicyEngine choosing modes per phase.
 
@@ -238,8 +248,9 @@ def run_iteration_engine(sim: DragonflySimulator, alloc: Allocation,
     for (s, d, b) in phases:
         batch = DecisionBatch.of(b, site=site, kind=kind)
         modes = engine.decide(batch)          # ONE call for the whole phase
+        plan = sim.plan_for(nodes[s], nodes[d], b) if use_plans else None
         res = sim.run_phase(nodes[s], nodes[d], b, base_policy, alloc,
-                            modes=modes)
+                            modes=modes, plan=plan)
         # post-send counter read (never delays the message itself)
         if res.t_us.size == len(batch):
             engine.bus.publish_flow_arrays(res.latency_us,
@@ -331,7 +342,8 @@ def run_benchmark(sim: DragonflySimulator, alloc: Allocation, pattern: str,
                   pattern_args: dict, iterations: int,
                   modes: Iterable = (RoutingMode.ADAPTIVE_0,
                                      RoutingMode.ADAPTIVE_3, "app_aware"),
-                  router_config: AppAwareConfig | None = None) -> dict:
+                  router_config: AppAwareConfig | None = None,
+                  use_plans: bool = False) -> dict:
     """Paper §5 protocol: alternate routing strategies on successive
     iterations inside ONE allocation, so transient noise hits all modes
     equally.  Returns {mode: [IterationResult, ...]}.
@@ -351,8 +363,9 @@ def run_benchmark(sim: DragonflySimulator, alloc: Allocation, pattern: str,
             if isinstance(mode, str):
                 results[mode].append(run_iteration_engine(
                     sim, alloc, phases, engines[mode],
-                    site=pattern, kind=kind))
+                    site=pattern, kind=kind, use_plans=use_plans))
             else:
                 results[mode].append(run_iteration(
-                    sim, alloc, phases, RoutingPolicy(mode)))
+                    sim, alloc, phases, RoutingPolicy(mode),
+                    use_plans=use_plans))
     return results

@@ -1,0 +1,25 @@
+"""jit'd public wrapper for the segment-sum kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.segment_sum.ref import segment_sum_ref
+from repro.kernels.segment_sum.segment_sum import segment_sum_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def segment_sum_op(values, segment_ids, num_segments: int, *,
+                   force_kernel: bool = False):
+    """Dispatch: Pallas kernel on TPU (or when forced, in interpret
+    mode); jax.ops.segment_sum reference otherwise."""
+    if _on_tpu():
+        return segment_sum_pallas(values, segment_ids, num_segments,
+                                  interpret=False)
+    if force_kernel:
+        return segment_sum_pallas(values, segment_ids, num_segments,
+                                  interpret=True)
+    return segment_sum_ref(values, segment_ids, num_segments)

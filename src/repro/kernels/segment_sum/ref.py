@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the segment-sum kernel."""
+
+from __future__ import annotations
+
+import jax
+
+
+def segment_sum_ref(values, segment_ids, num_segments: int):
+    """sum of `values` per segment id — np.bincount(weights=...) in jax."""
+    return jax.ops.segment_sum(values, segment_ids,
+                               num_segments=num_segments)

@@ -1,0 +1,72 @@
+"""Blocked one-hot segment-sum — Pallas TPU kernel.
+
+The Dragonfly fast path's link-load accumulation is a scatter-add
+(np.bincount with weights): 1-2M (link id, bytes) pairs accumulated
+into ~56k link bins, four times per phase.  Scatter is the one shape
+TPUs hate, so the kernel recasts it MXU/VPU-friendly as a blocked
+one-hot reduction:
+
+  * the pair stream is tiled into [block_pairs] chunks, the segment
+    axis into [block_segs] chunks;
+  * grid = (segment_blocks, pair_blocks) with the PAIR dim innermost,
+    so each output block stays resident in VMEM across the whole pair
+    sweep (init at pair-block 0, accumulate, flush once);
+  * each step builds the one-hot mask (ids == seg_base + iota) for its
+    tile and reduces mask*values over the pair axis.
+
+Out-of-range ids (the padding the wrapper adds to reach a block
+multiple) match no segment and vanish.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _segment_sum_kernel(ids_ref, val_ref, o_ref, *, block_segs: int):
+    j = pl.program_id(1)                  # pair-block index (inner dim)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    seg_base = pl.program_id(0) * block_segs
+    ids = ids_ref[...]                    # [block_pairs] int32
+    vals = val_ref[...].astype(jnp.float32)
+    seg = seg_base + jax.lax.broadcasted_iota(
+        jnp.int32, (ids.shape[0], block_segs), 1)
+    hit = ids[:, None] == seg             # [block_pairs, block_segs]
+    o_ref[...] += jnp.sum(jnp.where(hit, vals[:, None], 0.0), axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "block_pairs",
+                                             "block_segs", "interpret"))
+def segment_sum_pallas(values, segment_ids, num_segments: int, *,
+                       block_pairs: int = 1024, block_segs: int = 512,
+                       interpret: bool = False):
+    """values: [n] float; segment_ids: [n] int -> [num_segments] float32."""
+    n = values.shape[0]
+    bp = max(1, min(block_pairs, n))
+    bs = max(1, min(block_segs, num_segments))
+    n_pad = -(-max(n, 1) // bp) * bp
+    segs_pad = -(-num_segments // bs) * bs
+    ids = jnp.full(n_pad, segs_pad, dtype=jnp.int32)
+    ids = ids.at[:n].set(segment_ids.astype(jnp.int32))
+    vals = jnp.zeros(n_pad, dtype=jnp.float32)
+    vals = vals.at[:n].set(values.astype(jnp.float32))
+    out = pl.pallas_call(
+        functools.partial(_segment_sum_kernel, block_segs=bs),
+        grid=(segs_pad // bs, n_pad // bp),
+        in_specs=[
+            pl.BlockSpec((bp,), lambda i, j: (j,)),
+            pl.BlockSpec((bp,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((segs_pad,), jnp.float32),
+        interpret=interpret,
+    )(ids, vals)
+    return out[:num_segments]

@@ -41,7 +41,8 @@ from typing import Hashable, Optional
 
 import numpy as np
 
-from repro.core.perf_model import flits_and_packets, transmission_cycles_eq2
+from repro.core.perf_model import (flits_and_packets, flits_and_packets_vec,
+                                   transmission_cycles_eq2)
 from repro.core.strategies import ModePerformance
 from repro.core.strategies import RoutingMode
 from repro.policy.types import (DecisionBatch, Feedback, KIND_ALLTOALL,
@@ -171,6 +172,178 @@ class SiteState:
                                             include_gated=include_gated)
 
 
+class _SiteTable:
+    """Array-of-structs state for every call site of one policy.
+
+    One row per site; one column per registered mode.  Replaces the
+    per-site Python automaton objects on the "phase" path so a decide()
+    touching many sites (per-flow sites, per-destination automata) is a
+    handful of NumPy ops over [G]-shaped gathers instead of a Python
+    loop of Algorithm-1 steps (ROADMAP: vectorize AppAwarePolicy across
+    sites).  Sample slots use age == -1 as the "never observed" mark.
+    """
+
+    def __init__(self, config: AppAwareConfig):
+        self.config = config
+        self.keys: dict = {}            # site key -> row
+        self.mode_of: list = []         # code -> mode object
+        self.code_of: dict = {}         # mode object -> code
+        n0, m0 = 0, 0
+        self.cum = np.zeros(n0, dtype=np.int64)
+        self.current = np.zeros(n0, dtype=np.int64)
+        self.decisions = np.zeros(n0, dtype=np.int64)
+        self.lat = np.zeros((n0, m0))
+        self.stall = np.zeros((n0, m0))
+        self.age = np.full((n0, m0), -1, dtype=np.int64)
+        self.ledgers: list = []         # row -> TrafficLedger
+        # pre-register the config's modes so hot decide()s never grow
+        for m in (config.mode_a, config.mode_b, config.mode_a_alltoall):
+            self.mode_code(m)
+
+    # ------------------------------------------------------------ registry
+    def mode_code(self, mode: Hashable) -> int:
+        code = self.code_of.get(mode)
+        if code is None:
+            code = self.code_of[mode] = len(self.mode_of)
+            self.mode_of.append(mode)
+            grow = np.zeros((self.lat.shape[0], 1))
+            self.lat = np.concatenate([self.lat, grow], axis=1)
+            self.stall = np.concatenate([self.stall, grow], axis=1)
+            self.age = np.concatenate(
+                [self.age, np.full((self.age.shape[0], 1), -1,
+                                   dtype=np.int64)], axis=1)
+        return code
+
+    def row(self, key: Hashable) -> int:
+        r = self.keys.get(key)
+        if r is None:
+            r = self.keys[key] = len(self.ledgers)
+            m = len(self.mode_of)
+            self.cum = np.append(self.cum, 0)
+            self.current = np.append(
+                self.current, self.code_of[self.config.mode_a])
+            self.decisions = np.append(self.decisions, 0)
+            self.lat = np.concatenate([self.lat, np.zeros((1, m))])
+            self.stall = np.concatenate([self.stall, np.zeros((1, m))])
+            self.age = np.concatenate(
+                [self.age, np.full((1, m), -1, dtype=np.int64)])
+            self.ledgers.append(TrafficLedger())
+        return r
+
+    # ------------------------------------------------------ vectorized step
+    def select_groups(self, rows_s: np.ndarray, msg_int: np.ndarray,
+                      a2a: np.ndarray):
+        """One Algorithm-1 step for G groups at once (unique site rows).
+
+        Returns (chosen codes [G], gated [G]) and mutates the table the
+        way G sequential SiteState.select() calls would."""
+        cfg = self.config
+        code_b = self.code_of[cfg.mode_b]
+        code_a = np.where(a2a, self.code_of[cfg.mode_a_alltoall],
+                          self.code_of[cfg.mode_a])
+        self.cum[rows_s] += msg_int
+        gated = self.cum[rows_s] < cfg.cumulative_threshold_bytes
+        chosen = np.full(len(rows_s), code_b, dtype=np.int64)
+        dec = ~gated
+        if dec.any():
+            s = rows_s[dec]
+            self.cum[s] = 0
+            self.decisions[s] += 1
+            chosen[dec] = self._decide_vec(s, msg_int[dec], code_a[dec])
+            self.current[s] = chosen[dec]
+        return chosen, gated
+
+    def _decide_vec(self, s: np.ndarray, msg_int: np.ndarray,
+                    code_a: np.ndarray) -> np.ndarray:
+        """Vectorized SiteState._decide: Eq.(3) over the Eq.(2) model,
+        with the λ/σ-scaled estimate replacing too-old samples."""
+        cfg = self.config
+        code_b = self.code_of[cfg.mode_b]
+        f, pk = flits_and_packets_vec(msg_int, cfg.is_put)
+        cur = self.current[s]
+        is_b = cur == code_b
+        # the known side: mode_b's sample when currently B, else the
+        # current mode's sample (falling back to mode_a's slot)
+        cur_has = self.age[s, cur] >= 0
+        known_code = np.where(is_b, code_b,
+                              np.where(cur_has, cur, code_a))
+        known_lat = self.lat[s, known_code]
+        known_stall = self.stall[s, known_code]
+        known_has = self.age[s, known_code] >= 0
+        # the other side: stored sample unless too old, else λ/σ scaling
+        other_code = np.where(is_b, code_a, code_b)
+        lam = np.where(is_b, 1.0 / max(cfg.lambda_latency, 1e-9),
+                       cfg.lambda_latency)
+        sig = np.where(is_b, 1.0 / max(cfg.sigma_stalls, 1e-9),
+                       cfg.sigma_stalls)
+        o_age = self.age[s, other_code]
+        use_stored = (o_age >= 0) & (o_age <= cfg.max_sample_age)
+        est_lat = np.where(use_stored, self.lat[s, other_code],
+                           known_lat * lam)
+        est_stall = np.where(use_stored, self.stall[s, other_code],
+                             known_stall * sig)
+        t_known = transmission_cycles_eq2(known_lat, known_stall, f, pk)
+        t_other = transmission_cycles_eq2(est_lat, est_stall, f, pk)
+        t_a = np.where(is_b, t_other, t_known)
+        t_b = np.where(is_b, t_known, t_other)
+        decided = np.where(t_b < t_a, code_b, code_a)
+        # nothing observed yet: keep going in the current regime
+        return np.where(known_has, decided,
+                        np.where(is_b, code_b, code_a))
+
+    def observe_groups(self, rows_s: np.ndarray, codes: np.ndarray,
+                       lat: np.ndarray, stall: np.ndarray) -> None:
+        """Vectorized observe_for_mode over unique site rows: age every
+        stored sample, then refresh the observed slots."""
+        self.age[rows_s] += self.age[rows_s] >= 0
+        self.lat[rows_s, codes] = lat
+        self.stall[rows_s, codes] = stall
+        self.age[rows_s, codes] = 0
+
+
+class _SiteView:
+    """SiteState-shaped read view over one _SiteTable row (so callers
+    and tests can keep poking `site(...).current/.samples/...` on the
+    vectorized "phase" path)."""
+
+    def __init__(self, table: _SiteTable, row: int):
+        self._table = table
+        self._row = row
+
+    config = property(lambda self: self._table.config)
+    decisions = property(lambda self: int(self._table.decisions[self._row]))
+    cumulative_bytes = property(lambda self: int(self._table.cum[self._row]))
+    current = property(
+        lambda self: self._table.mode_of[self._table.current[self._row]])
+    ledger = property(lambda self: self._table.ledgers[self._row])
+
+    @property
+    def samples(self) -> dict:
+        t, r = self._table, self._row
+        return {t.mode_of[c]: ModePerformance(t.lat[r, c], t.stall[r, c],
+                                              age=int(t.age[r, c]))
+                for c in range(len(t.mode_of)) if t.age[r, c] >= 0}
+
+    def traffic_fraction(self, mode: Hashable, *,
+                         include_gated: bool = True) -> float:
+        return self.ledger.traffic_fraction(mode,
+                                            include_gated=include_gated)
+
+
+def _waves(rows: np.ndarray):
+    """Split group indices into passes with unique site rows, preserving
+    order — duplicate sites in one batch step sequentially (the rare
+    same-site-two-kinds case), everyone else in one vectorized pass."""
+    order: dict = {}
+    wave_of = np.empty(len(rows), dtype=np.int64)
+    for i, r in enumerate(rows):
+        k = order.get(r, 0)
+        order[r] = k + 1
+        wave_of[i] = k
+    for wv in range(int(wave_of.max()) + 1 if len(rows) else 0):
+        yield np.flatnonzero(wave_of == wv)
+
+
 class AppAwarePolicy:
     """Algorithm 1 as a batched, multi-call-site Policy.
 
@@ -178,9 +351,12 @@ class AppAwarePolicy:
       * "phase"  — one automaton step per (site, kind) group per decide();
         the group's max message size drives the gate/decision, all rows
         get the group's mode (the paper's per-phase protocol; what the
-        benchmark runner always did).  No per-row Python work.
-      * "message" — row-by-row replay of the legacy per-message protocol;
-        decision-for-decision identical to the seed AppAwareRouter.
+        benchmark runner always did).  Site state is array-of-structs
+        (`_SiteTable`): the gate, Eq.(3) decision and sample updates run
+        vectorized across all groups of the batch.
+      * "message" — row-by-row replay of the legacy per-message protocol
+        over `SiteState` automatons; decision-for-decision identical to
+        the seed AppAwareRouter.
     """
 
     def __init__(self, config: AppAwareConfig | None = None, *,
@@ -189,13 +365,16 @@ class AppAwarePolicy:
             raise ValueError(f"unknown granularity: {granularity!r}")
         self.config = config or AppAwareConfig()
         self.granularity = granularity
-        self._sites: dict = {}
+        self._sites: dict = {}          # "message" path: key -> SiteState
+        self._table = _SiteTable(self.config)   # "phase" path state
         #: per-row gate mask of the last decide() (engine ledger input)
         self.last_gated: np.ndarray | None = None
-        self._pending: list = []   # [(SiteState, rows, modes_of_rows)]
+        self._pending: list = []   # [(site row/state, rows, modes_of_rows)]
 
     # ------------------------------------------------------------------ sites
-    def site(self, key: Hashable = "default") -> SiteState:
+    def site(self, key: Hashable = "default"):
+        if self.granularity == "phase":
+            return _SiteView(self._table, self._table.row(key))
         st = self._sites.get(key)
         if st is None:
             st = self._sites[key] = SiteState(self.config)
@@ -203,6 +382,8 @@ class AppAwarePolicy:
 
     # ----------------------------------------------------------------- decide
     def decide(self, batch: DecisionBatch) -> np.ndarray:
+        if self.granularity == "phase":
+            return self._decide_phase(batch)
         n = len(batch)
         modes = np.empty(n, dtype=object)
         gated = np.zeros(n, dtype=bool)
@@ -210,30 +391,57 @@ class AppAwarePolicy:
         for site_key, kind, rows in batch.groups():
             st = self.site(site_key)
             a2a = kind == KIND_ALLTOALL
-            if self.granularity == "phase":
+            row_modes = np.empty(len(rows), dtype=object)
+            for j, i in enumerate(rows):
                 before = st.cumulative_bytes
-                msg = float(batch.msg_bytes[rows].max())
-                mode = st.select(int(msg), alltoall=a2a)
-                modes[rows] = mode
-                was_gated = before + msg \
+                size = int(batch.msg_bytes[i])
+                row_modes[j] = modes[i] = st.select(size, alltoall=a2a)
+                gated[i] = before + size \
                     < self.config.cumulative_threshold_bytes
-                gated[rows] = was_gated
-                # select() ledgered only the gate-driving max message;
-                # account the rest of the group's bytes too so the site
-                # ledger matches the engine's traffic truth
-                rest = float(batch.msg_bytes[rows].sum()) - msg
-                if rest > 0:
-                    st.ledger.add(mode, rest, gated=was_gated)
-                row_modes = np.full(len(rows), mode, dtype=object)
-            else:
-                row_modes = np.empty(len(rows), dtype=object)
-                for j, i in enumerate(rows):
-                    before = st.cumulative_bytes
-                    size = int(batch.msg_bytes[i])
-                    row_modes[j] = modes[i] = st.select(size, alltoall=a2a)
-                    gated[i] = before + size \
-                        < self.config.cumulative_threshold_bytes
             pending.append((st, rows, row_modes))
+        self.last_gated = gated
+        self._pending = pending
+        return modes
+
+    def _decide_phase(self, batch: DecisionBatch) -> np.ndarray:
+        n = len(batch)
+        tbl = self._table
+        groups = list(batch.groups())
+        rows_s = np.array([tbl.row(k) for k, _, _ in groups],
+                          dtype=np.int64)
+        msgs = np.array([float(batch.msg_bytes[rows].max())
+                         for _, _, rows in groups])
+        sums = np.array([float(batch.msg_bytes[rows].sum())
+                         for _, _, rows in groups])
+        a2a = np.array([kind == KIND_ALLTOALL for _, kind, _ in groups])
+        before = np.empty(len(groups))   # pre-step cum, filled per wave
+        chosen = np.empty(len(groups), dtype=np.int64)
+        gated_grp = np.empty(len(groups), dtype=bool)
+        for wv in _waves(rows_s):
+            # wave rows are unique -> the gate/decision math vectorizes;
+            # `before` must still see earlier waves' mutations
+            before[wv] = tbl.cum[rows_s[wv]]
+            chosen[wv], gated_grp[wv] = tbl.select_groups(
+                rows_s[wv], msgs[wv].astype(np.int64), a2a[wv])
+        # Fig.8/9 gate semantics for the engine ledger: float comparison
+        # over the pre-step cumulative counter (legacy behaviour)
+        was_gated = before + msgs < self.config.cumulative_threshold_bytes
+        modes = np.empty(n, dtype=object)
+        gated = np.zeros(n, dtype=bool)
+        pending = []
+        for gi, (_, _, rows) in enumerate(groups):
+            mode = tbl.mode_of[chosen[gi]]
+            modes[rows] = mode
+            gated[rows] = was_gated[gi]
+            # the gate-driving max message is ledgered like select() did;
+            # the rest of the group's bytes ride along so the site ledger
+            # matches the engine's traffic truth
+            led = tbl.ledgers[rows_s[gi]]
+            led.add(mode, int(msgs[gi]), gated=bool(gated_grp[gi]))
+            rest = sums[gi] - msgs[gi]
+            if rest > 0:
+                led.add(mode, rest, gated=bool(was_gated[gi]))
+            pending.append((rows_s[gi], rows, mode))
         self.last_gated = gated
         self._pending = pending
         return modes
@@ -243,29 +451,40 @@ class AppAwarePolicy:
         """Feed (L, s) back for the rows of the last decide().
 
         In "phase" granularity each group collapses to one weighted-mean
-        sample (the runner's per-phase mean-counter observation); in
-        "message" granularity every row refreshes its own mode's slot in
-        row order, replaying the legacy select/observe interleave."""
+        sample (the runner's per-phase mean-counter observation) and the
+        sample-table refresh runs vectorized across groups; in "message"
+        granularity every row refreshes its own mode's slot in row
+        order, replaying the legacy select/observe interleave."""
         if not self._pending:
             return
         if len(feedback) != len(batch):
             raise ValueError("feedback rows must match the decided batch")
         lat, st_, w = (feedback.latency_cycles, feedback.stalls_per_flit,
                        feedback.weight)
-        for site_state, rows, row_modes in self._pending:
-            if self.granularity == "phase":
+        if self.granularity == "phase":
+            tbl = self._table
+            rows_s = np.array([site for site, _, _ in self._pending],
+                              dtype=np.int64)
+            codes = np.array([tbl.code_of[mode]
+                              for _, _, mode in self._pending],
+                             dtype=np.int64)
+            lat_g = np.empty(len(self._pending))
+            stall_g = np.empty(len(self._pending))
+            for gi, (_, rows, _) in enumerate(self._pending):
                 wr = w[rows]
                 tot = float(wr.sum()) or 1.0
-                site_state.observe_for_mode(
-                    row_modes[0],
-                    float((lat[rows] * wr).sum() / tot),
-                    float((st_[rows] * wr).sum() / tot))
+                lat_g[gi] = float((lat[rows] * wr).sum() / tot)
+                stall_g[gi] = float((st_[rows] * wr).sum() / tot)
+            for wv in _waves(rows_s):
+                tbl.observe_groups(rows_s[wv], codes[wv], lat_g[wv],
+                                   stall_g[wv])
+            self._pending = []
+            return
+        for site_state, rows, row_modes in self._pending:
+            for j, i in enumerate(rows):
+                site_state.observe_for_mode(row_modes[j],
+                                            float(lat[i]), float(st_[i]))
                 site_state._pending_mode = None
-            else:
-                for j, i in enumerate(rows):
-                    site_state.observe_for_mode(row_modes[j],
-                                                float(lat[i]), float(st_[i]))
-                    site_state._pending_mode = None
         self._pending = []
 
     # ------------------------------------------------------------------ stats
@@ -273,11 +492,13 @@ class AppAwarePolicy:
                          include_gated: bool = True) -> float:
         """Aggregated over all call sites."""
         merged = TrafficLedger()
-        for st in self._sites.values():
-            for m, b in st.ledger.sent.items():
+        ledgers = self._table.ledgers if self.granularity == "phase" \
+            else [st.ledger for st in self._sites.values()]
+        for led in ledgers:
+            for m, b in led.sent.items():
                 merged.sent[m] = merged.sent.get(m, 0.0) + b
-            for m, b in st.ledger.gated.items():
+            for m, b in led.gated.items():
                 merged.gated[m] = merged.gated.get(m, 0.0) + b
-            for m, b in st.ledger.decided.items():
+            for m, b in led.decided.items():
                 merged.decided[m] = merged.decided.get(m, 0.0) + b
         return merged.traffic_fraction(mode, include_gated=include_gated)

@@ -386,3 +386,71 @@ def test_decision_batch_shape_validation():
                       np.empty(3, dtype=object))
     with pytest.raises(ValueError):
         DecisionBatch.of([1, 2, 3], site=["a", "b"])
+
+
+# --------------------------------------------------------------------------
+# PR-3 satellite: the vectorized _SiteTable "phase" path is step-for-step
+# equivalent to driving one SiteState automaton per group sequentially.
+# --------------------------------------------------------------------------
+def _site_state_phase_reference(policy_cfg, trace):
+    """The pre-vectorization phase-granularity loop, re-implemented over
+    SiteState (kept for the "message" path) as the equivalence oracle."""
+    from repro.policy.app_aware import SiteState
+
+    sites, log = {}, []
+    for batch, feedback in trace:
+        pending = []
+        for site_key, kind, rows in batch.groups():
+            stt = sites.setdefault(site_key, SiteState(policy_cfg))
+            msg = float(batch.msg_bytes[rows].max())
+            mode = stt.select(int(msg), alltoall=kind == KIND_ALLTOALL)
+            pending.append((stt, rows, mode))
+            log.append((site_key, mode))
+        lat, st_, w = (feedback.latency_cycles, feedback.stalls_per_flit,
+                       feedback.weight)
+        for stt, rows, mode in pending:
+            wr = w[rows]
+            tot = float(wr.sum()) or 1.0
+            stt.observe_for_mode(mode, float((lat[rows] * wr).sum() / tot),
+                                 float((st_[rows] * wr).sum() / tot))
+    return sites, log
+
+
+@given(seed=st.integers(0, 2000))
+def test_phase_table_matches_sequential_site_states(seed):
+    rng = np.random.default_rng(seed)
+    cfg = AppAwareConfig()
+    pol = AppAwarePolicy(cfg, granularity="phase")
+    trace = []
+    site_pool = ["s0", "s1", "s2"]
+    for _ in range(12):
+        n = int(rng.integers(1, 6))
+        sizes = (2.0 ** rng.uniform(6, 26, size=n))
+        site = np.empty(n, dtype=object)
+        site[:] = [site_pool[i] for i in rng.integers(0, 3, size=n)]
+        kind = np.empty(n, dtype=object)
+        kind[:] = [KIND_ALLTOALL if x else KIND_PT2PT
+                   for x in rng.random(n) < 0.4]
+        batch = DecisionBatch(np.asarray(sizes, dtype=np.float64),
+                              site, kind)
+        fb = Feedback.of(rng.uniform(100, 5e4, size=n),
+                         rng.uniform(0, 5, size=n))
+        trace.append((batch, fb))
+    got_log = []
+    for batch, fb in trace:
+        modes = pol.decide(batch)
+        for site_key, kind, rows in batch.groups():
+            got_log.append((site_key, modes[rows[0]]))
+        pol.update(batch, fb)
+    ref_sites, ref_log = _site_state_phase_reference(cfg, trace)
+    assert got_log == ref_log
+    for key, ref in ref_sites.items():
+        view = pol.site(key)
+        assert view.current is ref.current
+        assert view.decisions == ref.decisions
+        assert view.cumulative_bytes == ref.cumulative_bytes
+        assert set(view.samples) == set(ref.samples)
+        for m, perf in ref.samples.items():
+            assert view.samples[m].latency_cycles \
+                == pytest.approx(perf.latency_cycles)
+            assert view.samples[m].age == perf.age
