@@ -3,7 +3,7 @@
 
 PY ?= python
 
-.PHONY: test bench-smoke bench-perf lint docs
+.PHONY: test bench-smoke bench-perf bench-interference lint docs
 
 # tier-1 verify (ROADMAP): same flags as CI
 test:
@@ -12,10 +12,19 @@ test:
 # reduced benchmark pass (the CI perf smoke; --full is the paper-scale run)
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only fig7,fig8,tpu --policy app_aware
+	PYTHONPATH=src $(PY) -m benchmarks.interference_matrix --smoke \
+		--out BENCH_interference.json
 
 # simulator phase-kernel perf trajectory: write + schema-check BENCH_sim.json
 bench-perf:
 	PYTHONPATH=src $(PY) -m benchmarks.perf_sim --smoke --out BENCH_sim.json
+	$(PY) scripts/ci_lint.py --bench
+
+# multi-tenant interference matrix: write + schema-check
+# BENCH_interference.json (docs/interference.md)
+bench-interference:
+	PYTHONPATH=src $(PY) -m benchmarks.interference_matrix \
+		--out BENCH_interference.json
 	$(PY) scripts/ci_lint.py --bench
 
 lint:

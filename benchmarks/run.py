@@ -24,8 +24,9 @@ def main(argv=None) -> None:
 
     from benchmarks import (fig3_allocation, fig4_fig5_hostnoise,
                             fig7_routing_pingpong, fig8_microbench,
-                            fig10_applications, model_validation,
-                            perf_sim, table1_correlation, tpu_selector)
+                            fig10_applications, interference_matrix,
+                            model_validation, perf_sim,
+                            table1_correlation, tpu_selector)
     suites = {
         "fig3": fig3_allocation.main,
         "table1": table1_correlation.main,
@@ -36,6 +37,7 @@ def main(argv=None) -> None:
         "model": model_validation.main,
         "tpu": tpu_selector.main,
         "perf": perf_sim.main,
+        "interference": interference_matrix.main,
     }
     #: suites whose adaptive arm is a pluggable repro.policy engine
     policy_suites = {"fig8", "fig10"}

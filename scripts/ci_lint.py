@@ -3,8 +3,10 @@
 Default mode: line length + trailing whitespace over the Python tree.
 ``--docs`` mode (the Makefile `docs` target): README/docs internal-link
 integrity + no stray __pycache__/*.pyc tracked in git.
-``--bench`` mode (the Makefile `bench-perf` target): BENCH_sim.json
-exists and parses against its schema (docs/performance.md).
+``--bench`` mode (the Makefile `bench-perf` / `bench-interference`
+targets): BENCH_sim.json exists and parses against its schema
+(docs/performance.md), and BENCH_interference.json — when present —
+matches bench_interference/v1 (docs/interference.md).
 """
 
 import argparse
@@ -134,6 +136,52 @@ def lint_bench_schema(require: bool = False) -> list:
     return bad
 
 
+#: BENCH_interference.json contract (benchmarks/interference_matrix.py):
+#: top-level fields -> type, and per-cell numeric fields
+_BENCH_INT_SCHEMA_TOP = {"schema": str, "rounds": int, "seed": int,
+                         "topology": dict, "mixes": list, "policies": list,
+                         "matrix": dict, "checks": dict}
+_BENCH_INT_CELL_FIELDS = ("victim_slowdown", "victim_time_us",
+                          "victim_alone_us", "victim_nonmin_fraction")
+
+
+def lint_bench_interference_schema(require: bool = False) -> list:
+    """BENCH_interference.json parses and matches bench_interference/v1."""
+    path = ROOT / "BENCH_interference.json"
+    if not path.exists():
+        return ["BENCH_interference.json: missing "
+                "(run `make bench-interference`)"] if require else []
+    try:
+        doc = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        return [f"BENCH_interference.json: unparseable ({e})"]
+    bad = []
+    for key, typ in _BENCH_INT_SCHEMA_TOP.items():
+        if key not in doc:
+            bad.append(f"BENCH_interference.json: missing key {key!r}")
+        elif not isinstance(doc[key], typ):
+            bad.append(f"BENCH_interference.json: {key!r} should be "
+                       f"{typ.__name__}")
+    if doc.get("schema") not in (None, "bench_interference/v1"):
+        bad.append(f"BENCH_interference.json: unknown schema "
+                   f"{doc.get('schema')!r}")
+    for mix, row in (doc.get("matrix") or {}).items():
+        for policy in (doc.get("policies") or list(row)):
+            cell = row.get(policy)
+            if not isinstance(cell, dict):
+                bad.append(f"BENCH_interference.json: matrix.{mix} missing "
+                           f"policy {policy!r}")
+                continue
+            for f in _BENCH_INT_CELL_FIELDS:
+                if not isinstance(cell.get(f), (int, float)):
+                    bad.append(f"BENCH_interference.json: matrix.{mix}."
+                               f"{policy}.{f} missing or non-numeric")
+            if not isinstance(cell.get("aggressor_slowdowns", {}), dict):
+                bad.append(f"BENCH_interference.json: matrix.{mix}."
+                           f"{policy}.aggressor_slowdowns should be a dict")
+    return bad
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--docs", action="store_true",
@@ -144,10 +192,12 @@ def main(argv=None) -> int:
                     help="require BENCH_sim.json and check its schema")
     args = ap.parse_args(argv)
     if args.bench:
-        bad = lint_bench_schema(require=True)
+        bad = (lint_bench_schema(require=True)
+               + lint_bench_interference_schema())
     elif args.docs:
         bad = (lint_docs_links() + lint_tracked_pycache()
-               + lint_bare_jax_calls() + lint_bench_schema())
+               + lint_bare_jax_calls() + lint_bench_schema()
+               + lint_bench_interference_schema())
     else:
         bad = lint_style()
     print("\n".join(bad))

@@ -13,15 +13,17 @@
 from repro.dragonfly.topology import DragonflyTopology, TopologyParams, Allocation
 from repro.dragonfly.routing import RoutingPolicy
 from repro.dragonfly.simulator import (DragonflySimulator, SimParams,
-                                       FlowResult, PhasePlan)
+                                       FlowResult, PhasePlan,
+                                       TenantSegments)
 from repro.dragonfly.traffic import (
     pingpong, allreduce, alltoall, barrier, broadcast, halo3d, sweep3d,
-    PATTERNS,
+    moe_alltoall, PATTERNS,
 )
 
 __all__ = [
     "DragonflyTopology", "TopologyParams", "Allocation", "RoutingPolicy",
     "DragonflySimulator", "SimParams", "FlowResult", "PhasePlan",
+    "TenantSegments",
     "pingpong", "allreduce", "alltoall", "barrier", "broadcast", "halo3d",
-    "sweep3d", "PATTERNS",
+    "sweep3d", "moe_alltoall", "PATTERNS",
 ]

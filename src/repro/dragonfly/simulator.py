@@ -49,6 +49,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from functools import cached_property
 
 import numpy as np
 
@@ -134,10 +135,78 @@ class FlowResult:
     flits: np.ndarray
     packets: np.ndarray
     nonmin_fraction: float      # byte fraction routed non-minimally
+    #: multi-tenant breakdown (run_phase(tenants=...) only; see
+    #: repro.tenancy / docs/interference.md), else None:
+    #:   tenant_of            [n_app]  tenant index of each app flow row
+    #:   tenant_link_loads    [K+1, n_links] backlog bytes per tenant
+    #:                        (row K = background traffic)
+    #:   link_load_q          [n_links] global backlog bytes (the sum)
+    #:   tenant_nonmin_fraction [K] per-tenant non-minimal byte fraction
+    tenant_of: np.ndarray | None = None
+    tenant_link_loads: np.ndarray | None = None
+    link_load_q: np.ndarray | None = None
+    tenant_nonmin_fraction: np.ndarray | None = None
 
     @property
     def phase_time_us(self) -> float:
         return float(self.t_us.max()) if self.t_us.size else 0.0
+
+    def tenant_slice(self, k: int) -> np.ndarray:
+        """Row indices of tenant `k`'s app flows (post-subsample order)."""
+        if self.tenant_of is None:
+            raise ValueError("not a multi-tenant result (tenants= not set)")
+        return np.flatnonzero(self.tenant_of == k)
+
+
+@dataclass(frozen=True)
+class TenantSegments:
+    """Flow-segment map of one flattened multi-tenant phase.
+
+    The tenancy engine (repro.tenancy) concatenates K tenants' flows into
+    ONE app batch; this object tells run_phase where each tenant's
+    segment lives so per-allocation NIC counters and the per-tenant
+    link-load breakdown can be split back out with the same bincount
+    segment-sum machinery the fast path uses for links (tenant-id
+    segment offsets instead of link ids).
+
+    allocations: K Allocations, tenant order == segment order.
+    offsets:     int64 [K+1]; tenant k owns app-flow rows
+                 [offsets[k], offsets[k+1]) of the PRE-subsample batch.
+    """
+
+    allocations: tuple
+    offsets: np.ndarray
+
+    @staticmethod
+    def of(allocations, counts) -> "TenantSegments":
+        """Build from per-tenant flow counts (tenant order)."""
+        off = np.concatenate([[0], np.cumsum(np.asarray(counts,
+                                                        dtype=np.int64))])
+        return TenantSegments(tuple(allocations), off)
+
+    def __len__(self) -> int:
+        return len(self.allocations)
+
+    @property
+    def n_flows(self) -> int:
+        return int(self.offsets[-1])
+
+    def tenant_of_flows(self) -> np.ndarray:
+        """[n_flows] tenant index per pre-subsample app-flow row."""
+        return np.searchsorted(self.offsets, np.arange(self.n_flows),
+                               side="right").astype(np.int64) - 1
+
+    @cached_property
+    def union_allocation(self) -> Allocation:
+        """Union of every tenant's nodes — the background-traffic
+        disjointness pool (other jobs share nodes with NO tenant)."""
+        nodes = np.unique(np.concatenate(
+            [np.asarray(a.nodes, dtype=np.int64)
+             for a in self.allocations])) if self.allocations \
+            else np.empty(0, dtype=np.int64)
+        ids = ",".join(a.allocation_id for a in self.allocations)
+        return Allocation(allocation_id=f"mix({ids})",
+                          nodes=tuple(int(x) for x in nodes))
 
 
 def _pair_compress(links: np.ndarray, valid: np.ndarray):
@@ -364,7 +433,8 @@ class DragonflySimulator:
     def run_phase(self, src_nodes, dst_nodes, bytes_, policy: RoutingPolicy,
                   allocation: Allocation | None = None,
                   modes: np.ndarray | None = None,
-                  plan: PhasePlan | None = None) -> FlowResult:
+                  plan: PhasePlan | None = None,
+                  tenants: TenantSegments | None = None) -> FlowResult:
         """Simulate one phase of concurrent flows routed with `policy`.
 
         `modes` (optional, [n_app] object array of RoutingModes) is the
@@ -374,11 +444,22 @@ class DragonflySimulator:
 
         `plan` (optional) replays a precomputed PhasePlan for the app
         flows (src/dst/bytes args are then ignored); candidate paths are
-        not redrawn — see the PhasePlan reuse contract."""
+        not redrawn — see the PhasePlan reuse contract.
+
+        `tenants` (optional, repro.tenancy path) declares the app batch
+        as K concatenated tenant segments: NIC counters are credited per
+        tenant allocation, background flows avoid the UNION of tenant
+        nodes, and the result carries the per-tenant link-load breakdown
+        (FlowResult.tenant_*).  Mutually exclusive with `allocation` —
+        a K=1 TenantSegments is bit-identical to passing that tenant's
+        Allocation directly (tests/test_tenancy.py)."""
         p = self.params
         topo = self.topo
         prof = p.profile_stages
         t0 = time.perf_counter() if prof else 0.0
+        if tenants is not None and allocation is not None:
+            raise ValueError("pass either allocation= or tenants=, not both")
+        tenant_of = None
 
         # --- app flows: from the plan, or validated + subsampled fresh ----
         if plan is not None:
@@ -386,6 +467,13 @@ class DragonflySimulator:
                 raise ValueError("modes must have one entry per app flow")
             if modes is not None and plan.subsample_idx is not None:
                 modes = modes[plan.subsample_idx]
+            if tenants is not None:
+                if tenants.n_flows != plan.n_flows_in:
+                    raise ValueError("tenant segments must cover the plan's "
+                                     "app flows")
+                tenant_of = tenants.tenant_of_flows()
+                if plan.subsample_idx is not None:
+                    tenant_of = tenant_of[plan.subsample_idx]
             src, dst, size = plan.src, plan.dst, plan.size
             n_app = plan.n_flows
         else:
@@ -395,17 +483,25 @@ class DragonflySimulator:
             n_app = src.shape[0]
             if modes is not None and np.shape(modes)[0] != n_app:
                 raise ValueError("modes must have one entry per app flow")
+            if tenants is not None:
+                if tenants.n_flows != n_app:
+                    raise ValueError("tenant segments must cover the app "
+                                     "flows")
+                tenant_of = tenants.tenant_of_flows()
             if n_app > p.max_flows:
                 idx = self.rng.choice(n_app, size=p.max_flows, replace=False)
                 scale = n_app / p.max_flows
                 src, dst, size = src[idx], dst[idx], size[idx] * scale
                 if modes is not None:
                     modes = modes[idx]
+                if tenant_of is not None:
+                    tenant_of = tenant_of[idx]
                 n_app = p.max_flows
         if n_app == 0 and not (p.bg_enable and p.bg_flows_per_phase):
             return FlowResult(*(np.zeros(0),) * 5, 0.0)
 
-        bg = self._bg_flows(allocation)
+        bg = self._bg_flows(tenants.union_allocation if tenants is not None
+                            else allocation)
 
         # --- candidate tensors (planless: one joint draw, as pre-refactor;
         #     plan: frozen app tensors + a fresh draw for the bg flows) ----
@@ -547,10 +643,25 @@ class DragonflySimulator:
         self.link_queue_s = self.link_queue_s * p.queue_carryover + excess_s
         self.clock_s += duration_s
 
-        # --- NIC counters for the allocation (§2.3) ------------------------
+        # --- NIC counters (§2.3): one allocation, or per tenant segment ----
         app_flits, app_packets = flits[:n_app], packets[:n_app]
         app_lat, app_stalls = lat_us[:n_app], s_flit[:n_app]
-        if allocation is not None:
+        if tenants is not None:
+            # each tenant sees ONLY its own NICs (§3.2: users cannot see
+            # other jobs' counters) — K masked observes, one per segment
+            for k, alloc_k in enumerate(tenants.allocations):
+                mk = tenant_of == k
+                c = self.counters.setdefault(alloc_k.allocation_id,
+                                             NICCounters())
+                c.observe(
+                    flits=int(app_flits[mk].sum()),
+                    stalled_cycles=int((app_flits[mk]
+                                        * app_stalls[mk]).sum()),
+                    packets=int(app_packets[mk].sum()),
+                    latency_us_total=float((app_lat[mk]
+                                            * app_packets[mk]).sum()),
+                )
+        elif allocation is not None:
             c = self.counters.setdefault(allocation.allocation_id,
                                          NICCounters())
             c.observe(
@@ -562,6 +673,31 @@ class DragonflySimulator:
 
         nonmin_bytes = float(
             (size_all[:n_app, None] * w_app * is_nonmin[None, :]).sum())
+
+        # --- per-tenant link-load breakdown (tenancy path only) ------------
+        # One flattened bincount over (tenant-id * n_links + link) segment
+        # offsets — the PR-3 pair-list machinery with the tenant id as an
+        # extra segment axis; row K is the background job's share, and the
+        # rows sum to the global backlog load_q (tests/test_tenancy.py).
+        t_loads = t_nonmin = None
+        if tenants is not None:
+            K = len(tenants)
+            w_np = np.asarray(w)
+            fc_rows = pair_fc // ncand
+            seg = np.full(pair_fc.shape[0], K, dtype=np.int64)
+            app_pair = fc_rows < n_app
+            seg[app_pair] = tenant_of[fc_rows[app_pair]]
+            vals_q = (size_all[:, None] * w_np).ravel()[pair_fc]
+            t_loads = np.bincount(
+                seg * topo.n_links + pair_links, weights=vals_q,
+                minlength=(K + 1) * topo.n_links,
+            ).reshape(K + 1, topo.n_links)
+            nm_flow = (size[:n_app, None] * w_app
+                       * is_nonmin[None, :]).sum(axis=1)
+            nm_t = np.bincount(tenant_of, weights=nm_flow, minlength=K)
+            bytes_t = np.bincount(tenant_of, weights=size[:n_app],
+                                  minlength=K)
+            t_nonmin = nm_t / np.maximum(bytes_t, 1e-9)
         if prof:
             self._stage("finalize", t0)
         return FlowResult(
@@ -571,6 +707,10 @@ class DragonflySimulator:
             flits=app_flits,
             packets=app_packets,
             nonmin_fraction=nonmin_bytes / max(float(size[:n_app].sum()), 1e-9),
+            tenant_of=tenant_of,
+            tenant_link_loads=t_loads,
+            link_load_q=np.asarray(load_q) if tenants is not None else None,
+            tenant_nonmin_fraction=t_nonmin,
         )
 
     # ----------------------------------------------------- numpy fixed point
@@ -691,5 +831,22 @@ class DragonflySimulator:
         return lat_us, s_flit
 
     # ----------------------------------------------------------------- misc
-    def reset_queues(self) -> None:
+    def reset_queues(self, *, include_estimates: bool = True) -> None:
+        """Clear the network's residual congestion state.
+
+        Shared-vs-isolated contract (docs/interference.md): ONE simulator
+        models ONE physical network, so back-to-back ``run_phase`` calls
+        SHARE link queues and the stale-estimate memory BY DESIGN — that
+        sharing is exactly how co-running allocations become each other's
+        noise in the tenancy engine.  For ISOLATED experiments (run-alone
+        baselines, reusing a simulator across independent scenarios) call
+        ``reset_queues()`` between them: it clears BOTH the persistent
+        link queues and the stale congestion-estimate memory.  Before the
+        tenancy PR it leaked ``est_memory_s``, so a previous allocation's
+        drained hotspots still phantom-congested the next allocation's
+        estimates across a "reset".  Pass ``include_estimates=False`` to
+        reproduce that legacy partial reset.  Per-allocation NIC counters
+        are already isolated per allocation_id and never leak."""
         self.link_queue_s[:] = 0.0
+        if include_estimates:
+            self.est_memory_s[:] = 0.0

@@ -155,6 +155,34 @@ def sweep3d(n_ranks: int, nx: int, var_bytes: int = 8) -> list[Phase]:
     return phases
 
 
+def moe_alltoall(n_ranks: int, tokens_per_rank: int = 4096,
+                 token_bytes: int = 2048, zipf_alpha: float = 1.0,
+                 seed: int = 0) -> list[Phase]:
+    """Expert-parallel MoE dispatch/combine: a SKEWED all-to-all.
+
+    The EP layer (repro.collectives.moe_ep) routes each token to its
+    top-1 expert, one expert shard per rank; router logits are never
+    uniform, so hot experts concentrate traffic — the rank-level
+    byte matrix is an alltoall whose columns follow a Zipf popularity
+    curve instead of a constant.  Two bulk phases per layer step:
+    dispatch (token -> expert) and combine (the mirror transpose).
+    `token_bytes` is one token's hidden activation (d_model * bf16).
+    Seeded and deterministic: the popularity permutation is drawn once
+    from `seed`, like the EP router's frozen gate."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(n_ranks)
+    pop = 1.0 / np.power(ranks + 1.0, zipf_alpha)
+    pop = rng.permutation(pop / pop.sum())       # expert popularity [n]
+    src = np.repeat(ranks, n_ranks - 1)
+    dst = np.concatenate([np.delete(ranks, i) for i in range(n_ranks)])
+    # tokens_per_rank * P(expert at dst) bytes from every sender, floored
+    # at one token so no pair degenerates to zero
+    size = np.maximum(tokens_per_rank * pop[dst], 1.0) * token_bytes
+    dispatch = _phase(src, dst, size)
+    combine = _phase(dst, src, size)
+    return [dispatch, combine]
+
+
 PATTERNS: dict[str, Callable[..., list[Phase]]] = {
     "pingpong": pingpong,
     "allreduce": allreduce,
@@ -163,6 +191,7 @@ PATTERNS: dict[str, Callable[..., list[Phase]]] = {
     "broadcast": broadcast,
     "halo3d": halo3d,
     "sweep3d": sweep3d,
+    "moe_alltoall": moe_alltoall,
 }
 
 
@@ -222,6 +251,7 @@ PATTERN_KIND = {
     "broadcast": KIND_BROADCAST,
     "halo3d": KIND_PT2PT,
     "sweep3d": KIND_PT2PT,
+    "moe_alltoall": KIND_ALLTOALL,
 }
 
 

@@ -15,7 +15,7 @@ from the deprecated `repro.core.app_aware.AppAwareRouter` shim.
 """
 
 from repro.policy.app_aware import (AppAwareConfig, AppAwarePolicy,
-                                    SiteState)
+                                    SiteState, scoped_site_filter)
 from repro.policy.engine import PolicyEngine, POLICY_NAMES, make_engine
 from repro.policy.policies import EpsilonGreedyPolicy, StaticPolicy
 from repro.policy.telemetry import TelemetryBus
@@ -24,7 +24,7 @@ from repro.policy.types import (DecisionBatch, Feedback, KIND_ALLREDUCE,
                                 Policy, TrafficLedger)
 
 __all__ = [
-    "AppAwareConfig", "AppAwarePolicy", "SiteState",
+    "AppAwareConfig", "AppAwarePolicy", "SiteState", "scoped_site_filter",
     "PolicyEngine", "POLICY_NAMES", "make_engine",
     "EpsilonGreedyPolicy", "StaticPolicy",
     "TelemetryBus",

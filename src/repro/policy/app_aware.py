@@ -488,13 +488,36 @@ class AppAwarePolicy:
         self._pending = []
 
     # ------------------------------------------------------------------ stats
+    def site_keys(self) -> list:
+        """Every call-site key this policy has seen (table row order)."""
+        if self.granularity == "phase":
+            return list(self._table.keys)
+        return list(self._sites)
+
+    def _ledgers(self, site_filter=None) -> list:
+        keyed = self._table.keys.items() if self.granularity == "phase" \
+            else {k: st for k, st in self._sites.items()}.items()
+        out = []
+        for key, v in keyed:
+            if site_filter is not None and not site_filter(key):
+                continue
+            out.append(self._table.ledgers[v]
+                       if self.granularity == "phase" else v.ledger)
+        return out
+
     def traffic_fraction(self, mode: Hashable, *,
-                         include_gated: bool = True) -> float:
-        """Aggregated over all call sites."""
+                         include_gated: bool = True,
+                         site_filter=None) -> float:
+        """Traffic fraction aggregated over call sites.
+
+        `site_filter` (optional, key -> bool) slices the aggregate to a
+        subset of sites — the _SiteTable slicing used by the tenancy
+        engine, whose shared-engine mode namespaces every site key as
+        ``(tenant_name, site)`` in ONE array-of-structs table and reads
+        per-tenant fractions back out with
+        ``site_filter=scoped_site_filter(tenant_name)``."""
         merged = TrafficLedger()
-        ledgers = self._table.ledgers if self.granularity == "phase" \
-            else [st.ledger for st in self._sites.values()]
-        for led in ledgers:
+        for led in self._ledgers(site_filter):
             for m, b in led.sent.items():
                 merged.sent[m] = merged.sent.get(m, 0.0) + b
             for m, b in led.gated.items():
@@ -502,3 +525,12 @@ class AppAwarePolicy:
             for m, b in led.decided.items():
                 merged.decided[m] = merged.decided.get(m, 0.0) + b
         return merged.traffic_fraction(mode, include_gated=include_gated)
+
+
+def scoped_site_filter(scope: Hashable):
+    """site_filter matching keys namespaced as ``(scope, ...)`` tuples
+    (and the bare ``scope`` key itself)."""
+    def _match(key) -> bool:
+        return key == scope or (isinstance(key, tuple) and len(key) >= 1
+                                and key[0] == scope)
+    return _match

@@ -95,7 +95,7 @@ def make_engine(name: str, *,
                 config: AppAwareConfig | None = None,
                 granularity: str = "phase",
                 epsilon: float = 0.1,
-                epsilon_decay: float = 0.05,
+                epsilon_decay: float = 0.15,
                 static_mode: Hashable = None,
                 seed: int = 0,
                 bus: TelemetryBus | None = None) -> PolicyEngine:

@@ -99,8 +99,15 @@ class DecisionBatch:
         n = len(self)
         sites, kinds = self.site, self.kind
         # fast path for the hot case (a whole phase shares one site/kind):
-        # no per-row Python loop
-        if n and (sites == sites[0]).all() and (kinds == kinds[0]).all():
+        # no per-row Python loop.  The comparands are wrapped as 1-element
+        # object arrays so tuple-valued sites (repro.tenancy's scoped
+        # (tenant, site) keys) compare elementwise instead of being
+        # broadcast as a length-2 array.
+        s0 = np.empty(1, dtype=object)
+        k0 = np.empty(1, dtype=object)
+        if n:
+            s0[0], k0[0] = sites[0], kinds[0]
+        if n and (sites == s0).all() and (kinds == k0).all():
             yield sites[0], kinds[0], np.arange(n, dtype=np.intp)
             return
         seen: dict = {}

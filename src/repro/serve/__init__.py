@@ -1,6 +1,7 @@
 # repro.serve — batched serving engine (prefill + decode) over the family-
 # uniform model API, with sharded KV caches / SSM states.
 
-from repro.serve.engine import ServeEngine, ServeConfig, Request
+from repro.serve.engine import (ServeEngine, ServeConfig, Request,
+                                route_kv_transfer)
 
-__all__ = ["ServeEngine", "ServeConfig", "Request"]
+__all__ = ["ServeEngine", "ServeConfig", "Request", "route_kv_transfer"]

@@ -46,6 +46,29 @@ class ServeConfig:
     comm_policy: Optional[str] = None
     n_pods: int = 2
     inner_chips: int = 256
+    #: multi-allocation serving: the fabric-level tenant id of this
+    #: engine.  KV-transfer decisions are keyed on the scoped site
+    #: ``(allocation_id, "kv_transfer")`` so several ServeEngines sharing
+    #: one PolicyEngine (see `comm_engine=` in __init__) keep independent
+    #: Algorithm-1 automatons in one _SiteTable — the same tenant
+    #: slicing the Dragonfly tenancy engine uses (docs/interference.md).
+    allocation_id: Optional[str] = None
+
+
+def route_kv_transfer(comm_engine, cost_model, nbytes: int, *,
+                      site="kv_transfer"):
+    """One policy decision + model-fed feedback for a KV-cache transfer.
+
+    Factored out of ServeEngine so multi-allocation serving paths (and
+    tests) can route transfers against a SHARED engine with per-
+    allocation scoped sites without building a model."""
+    from repro.policy import DecisionBatch
+    mode = comm_engine.decide(DecisionBatch.single(nbytes, site=site))[0]
+    perf = cost_model.predict(nbytes, mode)
+    comm_engine.bus.publish_flow_arrays(
+        [perf.latency_cycles / 1e3], [perf.stall_cycles_per_flit],
+        source="model")
+    return mode
 
 
 def make_serve_step(cfg: ModelConfig):
@@ -73,25 +96,45 @@ def make_prefill(cfg: ModelConfig):
 
 
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
+                 comm_engine=None):
         self.cfg, self.params, self.scfg = cfg, params, scfg
         self._step = make_serve_step(cfg)
         self._prefill = make_prefill(cfg)
         self.comm_engine = self._cost_model = None
         #: [(kv_bytes, mode)] per run() — the KV-transfer schedule log
         self.policy_decisions: list = []
-        if scfg.comm_policy:
+        if scfg.comm_policy or comm_engine is not None:
             from repro.collectives.modes import CollectiveMode
             from repro.collectives.selector import ICICostModel, MeshSpec
             from repro.policy import make_engine
             self._cost_model = ICICostModel(
                 MeshSpec(n_pods=scfg.n_pods, inner_chips=scfg.inner_chips))
-            self.comm_engine = make_engine(
-                scfg.comm_policy,
-                mode_a=CollectiveMode.HIERARCHICAL,
-                mode_b=CollectiveMode.DIRECT,
-                mode_a_alltoall=CollectiveMode.HIERARCHICAL,
-                static_mode=CollectiveMode.DIRECT)
+            if comm_engine is not None:
+                # Multi-allocation serving: several engines share ONE
+                # PolicyEngine; per-allocation scoped sites keep their
+                # learned states separate (ISSUE: multi-allocation
+                # backend_for).
+                self.comm_engine = comm_engine
+            else:
+                self.comm_engine = make_engine(
+                    scfg.comm_policy,
+                    mode_a=CollectiveMode.HIERARCHICAL,
+                    mode_b=CollectiveMode.DIRECT,
+                    mode_a_alltoall=CollectiveMode.HIERARCHICAL,
+                    static_mode=CollectiveMode.DIRECT)
+
+    @property
+    def kv_site(self):
+        """Decision site for this engine's KV transfers.
+
+        Scoped to the allocation when `ServeConfig.allocation_id` is set
+        so co-tenant engines sharing a PolicyEngine don't pollute each
+        other's per-site learned state; recover one tenant's view with
+        `scoped_site_filter(allocation_id)`."""
+        if self.scfg.allocation_id is not None:
+            return (self.scfg.allocation_id, "kv_transfer")
+        return "kv_transfer"
 
     def _kv_bytes(self, prompt_tokens: int) -> int:
         """KV cache volume of one prefilled batch (bf16, all layers)."""
@@ -104,14 +147,9 @@ class ServeEngine:
 
     def _route_kv_transfer(self, prompt_tokens: int):
         """One engine decision for this batch's prefill->decode transfer."""
-        from repro.policy import DecisionBatch
         nbytes = self._kv_bytes(prompt_tokens)
-        mode = self.comm_engine.decide(
-            DecisionBatch.single(nbytes, site="kv_transfer"))[0]
-        perf = self._cost_model.predict(nbytes, mode)
-        self.comm_engine.bus.publish_flow_arrays(
-            [perf.latency_cycles / 1e3], [perf.stall_cycles_per_flit],
-            source="model")
+        mode = route_kv_transfer(self.comm_engine, self._cost_model,
+                                 nbytes, site=self.kv_site)
         self.policy_decisions.append((nbytes, mode))
         return mode
 

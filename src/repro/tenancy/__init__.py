@@ -1,0 +1,26 @@
+"""repro.tenancy — multi-tenant interference on one Dragonfly.
+
+K co-running jobs (node-disjoint allocations, shared links) interleaved
+into ONE batched simulator via TenantSegments; per-tenant observables
+split back out; victim slowdown scored against run-alone baselines.
+See docs/interference.md.
+
+    from repro.tenancy import (InterferenceEngine, TenancyMix, Workload,
+                               sweep)
+
+    mix = TenancyMix("pp-vs-a2a", (
+        Workload("victim", "pingpong", 32, arm=RoutingMode.ADAPTIVE_3),
+        Workload("aggr", "alltoall", 64, arm=RoutingMode.ADAPTIVE_0)))
+    res = InterferenceEngine(topo).run_mix(mix, rounds=4)
+    res.victim_slowdown      # mix time / run-alone time
+"""
+
+from repro.tenancy.engine import (InterferenceEngine, MixResult,
+                                  TenantReport, arm_label)
+from repro.tenancy.spec import TenancyMix, Workload
+from repro.tenancy.sweep import sweep
+
+__all__ = [
+    "InterferenceEngine", "MixResult", "TenantReport", "arm_label",
+    "TenancyMix", "Workload", "sweep",
+]

@@ -1,0 +1,228 @@
+"""InterferenceEngine — K co-running jobs on ONE batched simulator.
+
+Each round interleaves every tenant's next phase into a single flattened
+flow batch (`TenantSegments` marks the per-tenant segments), runs it
+through `DragonflySimulator.run_phase(tenants=...)` — one fixed point
+over the SHARED links, reusing the PR-3 bincount/segment-sum fast path —
+and splits the observables back out per tenant: completion time, NIC
+counters, latency/stall feedback to each tenant's PolicyEngine, and the
+per-tenant link-load breakdown.
+
+Victim slowdown (the interference matrix's cell metric) is the mix time
+divided by a run-alone baseline: the same tenant, same allocation, same
+seed, on a FRESH simulator with nobody else on the machine.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.counters import NICCounters
+from repro.core.strategies import RoutingMode
+from repro.dragonfly.routing import RoutingPolicy
+from repro.dragonfly.simulator import (DragonflySimulator, SimParams,
+                                       TenantSegments)
+from repro.dragonfly.topology import DragonflyTopology
+from repro.dragonfly.traffic import PATTERN_KIND, engine_for_arm
+from repro.policy import DecisionBatch, KIND_PT2PT
+from repro.tenancy.spec import TenancyMix, Workload
+
+
+def arm_label(arm) -> str:
+    """Stable display/JSON label of a routing arm."""
+    return arm if isinstance(arm, str) else getattr(arm, "name", str(arm))
+
+
+@dataclass
+class TenantReport:
+    """One tenant's observables over a mix run."""
+
+    name: str
+    arm: str
+    time_us: float                    # sum of per-round completion + host
+    mean_latency_us: float
+    mean_stalls: float
+    nonmin_fraction: float            # byte-weighted, from the breakdown
+    nic: NICCounters                  # this allocation's counter snapshot
+    alone_time_us: float | None = None
+
+    @property
+    def slowdown(self) -> float | None:
+        """Mix time over run-alone time (1.0 == no interference)."""
+        if self.alone_time_us is None or self.alone_time_us <= 0.0:
+            return None
+        return self.time_us / self.alone_time_us
+
+
+@dataclass
+class MixResult:
+    """One (mix, policy, placement) cell of the interference matrix."""
+
+    mix: str
+    rounds: int
+    victim: int
+    tenants: list                     # [TenantReport], tenant order
+    #: [K+1, n_links] mean per-round backlog bytes (row K = background)
+    tenant_link_loads: np.ndarray | None = None
+
+    @property
+    def victim_report(self) -> TenantReport:
+        return self.tenants[self.victim]
+
+    @property
+    def victim_slowdown(self) -> float | None:
+        return self.victim_report.slowdown
+
+
+class InterferenceEngine:
+    """Run TenancyMix instances and score per-tenant interference.
+
+    shared_engine: tenants whose arm is the SAME policy name share one
+    PolicyEngine; their per-site learned state stays separate because
+    decision sites are namespaced ``(tenant_name, pattern)`` — recover a
+    tenant's view with `repro.policy.scoped_site_filter(tenant_name)`.
+    Default is one engine per tenant (independent jobs).
+    """
+
+    #: §5.1 counter-read overhead paid per phase by engine-driven arms
+    counter_read_overhead_us: float = 0.35
+
+    def __init__(self, topo: DragonflyTopology,
+                 params: SimParams | None = None, *,
+                 seed: int = 0, shared_engine: bool = False):
+        self.topo = topo
+        self.params = params or SimParams()
+        self.seed = seed
+        self.shared_engine = shared_engine
+        self._base_policy = RoutingPolicy(RoutingMode.ADAPTIVE_0)
+
+    # ----------------------------------------------------------- internals
+    def _engines_for(self, workloads: Sequence[Workload],
+                     sim: DragonflySimulator) -> dict:
+        """tenant index -> PolicyEngine for every named-policy arm."""
+        engines: dict = {}
+        by_name: dict = {}
+        for k, w in enumerate(workloads):
+            if not w.is_engine_arm:
+                continue
+            if self.shared_engine and w.arm in by_name:
+                engines[k] = by_name[w.arm]
+                continue
+            eng = engine_for_arm(w.arm, sim, seed=self.seed + k)
+            engines[k] = by_name[w.arm] = eng
+        return engines
+
+    def _run(self, workloads: Sequence[Workload], allocs: Sequence,
+             rounds: int):
+        """Core loop: returns ([TenantReport], mean tenant_link_loads).
+
+        Builds a FRESH simulator (deterministic in SimParams.seed), so a
+        K=1 call is the run-alone baseline of that tenant on the same
+        nodes — and is bit-identical, round for round, to driving
+        run_phase(allocation=...) by hand (tests/test_tenancy.py).
+        """
+        sim = DragonflySimulator(self.topo, self.params)
+        p = self.params
+        engines = self._engines_for(workloads, sim)
+        phases = [w.phases() for w in workloads]
+        K = len(workloads)
+        time_us = np.zeros(K)
+        lat: list = [[] for _ in range(K)]
+        stl: list = [[] for _ in range(K)]
+        nmf: list = [[] for _ in range(K)]
+        wts: list = [[] for _ in range(K)]
+        loads_acc = None
+        for r in range(rounds):
+            srcs, dsts, byts, mode_l, counts = [], [], [], [], []
+            for k, w in enumerate(workloads):
+                s, d, b = phases[k][r % len(phases[k])]
+                nodes = np.asarray(allocs[k].nodes)
+                srcs.append(nodes[s])
+                dsts.append(nodes[d])
+                byts.append(np.asarray(b, dtype=np.float64))
+                counts.append(len(b))
+                if w.is_engine_arm:
+                    batch = DecisionBatch.of(
+                        b, site=(w.name, w.pattern),
+                        kind=PATTERN_KIND.get(w.pattern, KIND_PT2PT))
+                    mode_l.append(np.asarray(engines[k].decide(batch),
+                                             dtype=object))
+                else:
+                    m = np.empty(len(b), dtype=object)
+                    m[:] = w.arm
+                    mode_l.append(m)
+            seg = TenantSegments.of(allocs, counts)
+            res = sim.run_phase(
+                np.concatenate(srcs), np.concatenate(dsts),
+                np.concatenate(byts), self._base_policy,
+                modes=np.concatenate(mode_l), tenants=seg)
+            if res.tenant_link_loads is not None:
+                loads_acc = res.tenant_link_loads if loads_acc is None \
+                    else loads_acc + res.tenant_link_loads
+            # split observables back out, tenant order (the host-noise
+            # draws consume sim.rng in this order: K=1 matches the
+            # single-app run_iteration stream exactly)
+            for k, w in enumerate(workloads):
+                rows = res.tenant_slice(k)
+                if w.is_engine_arm and rows.size:
+                    # post-send counter read feeding THIS tenant's engine
+                    if rows.size == counts[k]:
+                        engines[k].bus.publish_flow_arrays(
+                            res.latency_us[rows], res.stalls_per_flit[rows])
+                    else:
+                        # statistically subsampled: phase-mean sample
+                        engines[k].bus.publish_flow_arrays(
+                            [float(res.latency_us[rows].mean())],
+                            [float(res.stalls_per_flit[rows].mean())])
+                host = p.host_overhead_us * sim.rng.lognormal(
+                    0.0, p.host_noise_sigma)
+                if w.is_engine_arm:
+                    host += self.counter_read_overhead_us
+                t_k = float(res.t_us[rows].max()) if rows.size else 0.0
+                time_us[k] += t_k + host
+                if rows.size:
+                    lat[k].append(float(res.latency_us[rows].mean()))
+                    stl[k].append(float(res.stalls_per_flit[rows].mean()))
+                    nmf[k].append(float(res.tenant_nonmin_fraction[k]))
+                    wts[k].append(float(byts[k].sum()))
+        reports = []
+        for k, w in enumerate(workloads):
+            wk = np.asarray(wts[k]) if wts[k] else np.ones(1)
+            reports.append(TenantReport(
+                name=w.name, arm=arm_label(w.arm),
+                time_us=float(time_us[k]),
+                mean_latency_us=float(np.average(lat[k], weights=wk))
+                if lat[k] else 0.0,
+                mean_stalls=float(np.average(stl[k], weights=wk))
+                if stl[k] else 0.0,
+                nonmin_fraction=float(np.average(nmf[k], weights=wk))
+                if nmf[k] else 0.0,
+                nic=sim.counters.get(allocs[k].allocation_id,
+                                     NICCounters()).snapshot()))
+        if loads_acc is not None and rounds:
+            loads_acc = loads_acc / rounds
+        return reports, loads_acc
+
+    # ------------------------------------------------------------- public
+    def run_alone(self, mix: TenancyMix, k: int, *, rounds: int = 4,
+                  allocs: Sequence | None = None) -> TenantReport:
+        """Tenant k's run-alone baseline: same allocation, empty machine."""
+        allocs = allocs if allocs is not None \
+            else mix.materialize(self.topo, seed=self.seed)
+        reports, _ = self._run((mix.workloads[k],), [allocs[k]], rounds)
+        return reports[0]
+
+    def run_mix(self, mix: TenancyMix, *, rounds: int = 4,
+                baselines: bool = True) -> MixResult:
+        """Run the whole mix; with baselines, score per-tenant slowdown."""
+        allocs = mix.materialize(self.topo, seed=self.seed)
+        reports, loads = self._run(mix.workloads, allocs, rounds)
+        if baselines:
+            for k in range(len(mix)):
+                alone = self.run_alone(mix, k, rounds=rounds, allocs=allocs)
+                reports[k].alone_time_us = alone.time_us
+        return MixResult(mix=mix.name, rounds=rounds, victim=mix.victim,
+                         tenants=reports, tenant_link_loads=loads)

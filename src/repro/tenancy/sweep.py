@@ -1,0 +1,59 @@
+"""(job-mix × victim-policy × placement) grid driver.
+
+`sweep()` fills the interference matrix the benchmark / paper discussion
+needs: for every mix, every candidate routing arm is installed on the
+VICTIM (the aggressors keep their specced arms — they are other people's
+jobs), optionally across victim placement tiers, and the victim's
+slowdown vs its run-alone baseline is recorded.  The qualitative Kang
+result this reproduces: adaptive-heavy aggressors inflate minimal-routed
+victims, and the app-aware arm keeps the victim closer to run-alone than
+fully-adaptive routing does.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+from repro.dragonfly.simulator import SimParams
+from repro.dragonfly.topology import DragonflyTopology
+from repro.tenancy.engine import InterferenceEngine, arm_label
+from repro.tenancy.spec import TenancyMix
+
+
+def sweep(topo: DragonflyTopology, mixes: Sequence[TenancyMix],
+          arms: Mapping, *, params: SimParams | None = None,
+          rounds: int = 4, seed: int = 0,
+          placements: Sequence = (None,),
+          shared_engine: bool = False) -> list:
+    """Run the grid; one flat record dict per cell.
+
+    arms: {label: RoutingMode member | policy name} — the victim's
+    candidate routing arms.  placements: victim spread overrides (None ==
+    keep the mix's specced placement).  Every cell re-seeds its own
+    InterferenceEngine so cells are independent and order-insensitive.
+    """
+    records = []
+    for mix in mixes:
+        for place in placements:
+            m = mix if place is None else mix.with_victim_spread(place)
+            for label, arm in arms.items():
+                cell = m.with_victim_arm(arm)
+                eng = InterferenceEngine(topo, params, seed=seed,
+                                         shared_engine=shared_engine)
+                res = eng.run_mix(cell, rounds=rounds)
+                vic = res.victim_report
+                records.append({
+                    "mix": mix.name,
+                    "policy": label,
+                    "arm": arm_label(arm),
+                    "placement": place or mix.victim_workload.spread,
+                    "victim": vic.name,
+                    "victim_slowdown": vic.slowdown,
+                    "victim_time_us": vic.time_us,
+                    "victim_alone_us": vic.alone_time_us,
+                    "victim_nonmin_fraction": vic.nonmin_fraction,
+                    "aggressor_slowdowns": {
+                        t.name: t.slowdown for i, t in
+                        enumerate(res.tenants) if i != res.victim},
+                })
+    return records

@@ -130,7 +130,9 @@ def test_patterns_shapes():
         args = {"pingpong": dict(size=1024), "allreduce": dict(elements=64),
                 "alltoall": dict(size_per_pair=512),
                 "barrier": {}, "broadcast": dict(size=2048),
-                "halo3d": dict(nx=64), "sweep3d": dict(nx=64)}[name]
+                "halo3d": dict(nx=64), "sweep3d": dict(nx=64),
+                "moe_alltoall": dict(tokens_per_rank=64,
+                                     token_bytes=128)}[name]
         phases = fn(16, **args)
         assert len(phases) >= 1
         for s, d, b in phases:

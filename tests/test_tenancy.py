@@ -1,0 +1,309 @@
+"""repro.tenancy guarantees: K=1 bit-identity with the single-app path,
+per-tenant observables summing to the global link loads, background-flow
+disjointness from the tenant union, the reset_queues contract, scoped
+policy sites, and the interference-engine determinism properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.strategies import RoutingMode
+from repro.dragonfly import (DragonflySimulator, DragonflyTopology,
+                             SimParams, TenantSegments, TopologyParams)
+from repro.dragonfly.routing import RoutingPolicy
+from repro.dragonfly.topology import make_allocation
+from repro.dragonfly.traffic import PATTERN_KIND, PATTERNS, moe_alltoall
+from repro.policy import (DecisionBatch, KIND_ALLTOALL, make_engine,
+                          scoped_site_filter)
+from repro.tenancy import InterferenceEngine, TenancyMix, Workload, sweep
+
+TOPO = DragonflyTopology(TopologyParams(n_groups=4, chassis_per_group=2,
+                                        blades_per_chassis=4))
+
+
+def _flows(alloc, seed=42, n=400):
+    rng = np.random.default_rng(seed)
+    nodes = np.asarray(alloc.nodes)
+    src = nodes[rng.integers(0, len(nodes), size=n)]
+    dst = nodes[rng.integers(0, len(nodes), size=n)]
+    size = rng.pareto(1.2, size=n) * 65536 + 1024
+    return src, dst, size
+
+
+def _mix2(seed=0):
+    return TenancyMix("mix2", (
+        Workload("vic", "halo3d", 16, {"nx": 32, "vars_": 2},
+                 arm=RoutingMode.ADAPTIVE_3),
+        Workload("agg", "alltoall", 24, {"size_per_pair": 16384},
+                 arm=RoutingMode.ADAPTIVE_0)))
+
+
+# --------------------------------------------------------------------------
+# K=1 bit-identity: a single-tenant TenantSegments replays the allocation=
+# path seed-for-seed — same FlowResult, same queue state, same rng stream,
+# same NIC counters.
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", [RoutingMode.ADAPTIVE_0,
+                                  RoutingMode.ADAPTIVE_3])
+def test_k1_tenants_bit_identical_to_allocation(mode):
+    al = make_allocation(TOPO, 12, spread="inter_groups", seed=3)
+    src, dst, size = _flows(al)
+    pol = RoutingPolicy(mode)
+    sp = SimParams(seed=0)
+    sim_a = DragonflySimulator(TOPO, sp)
+    sim_t = DragonflySimulator(TOPO, sp)
+    seg = TenantSegments.of([al], [len(size)])
+    for _ in range(3):               # carry queue state across phases too
+        ra = sim_a.run_phase(src, dst, size, pol, allocation=al)
+        rt = sim_t.run_phase(src, dst, size, pol, tenants=seg)
+        assert np.array_equal(ra.t_us, rt.t_us)
+        assert np.array_equal(ra.latency_us, rt.latency_us)
+        assert np.array_equal(ra.stalls_per_flit, rt.stalls_per_flit)
+        assert ra.nonmin_fraction == rt.nonmin_fraction
+    assert np.array_equal(sim_a.link_queue_s, sim_t.link_queue_s)
+    assert np.array_equal(sim_a.est_memory_s, sim_t.est_memory_s)
+    assert (sim_a.rng.bit_generator.state
+            == sim_t.rng.bit_generator.state)
+    ca = sim_a.counters[al.allocation_id]
+    ct = sim_t.counters[al.allocation_id]
+    assert ca.request_flits == ct.request_flits
+    assert ca.request_packets == ct.request_packets
+    assert (ca.request_packets_cumulative_latency_us
+            == ct.request_packets_cumulative_latency_us)
+    # the K=1 result additionally carries the tenant breakdown
+    assert rt.tenant_of is not None and ra.tenant_of is None
+    assert np.array_equal(rt.tenant_slice(0), np.arange(len(rt.t_us)))
+
+
+def test_k1_run_mix_slowdown_is_exactly_one():
+    """Run-alone baseline == the K=1 mix itself (same seed, fresh sims)."""
+    mix = TenancyMix("solo", (_mix2().workloads[0],))
+    eng = InterferenceEngine(TOPO, SimParams(seed=5), seed=5)
+    res = eng.run_mix(mix, rounds=3)
+    assert res.victim_slowdown == 1.0
+
+
+def test_run_phase_rejects_allocation_plus_tenants():
+    al = make_allocation(TOPO, 8, spread="inter_groups", seed=1)
+    src, dst, size = _flows(al, n=16)
+    seg = TenantSegments.of([al], [16])
+    sim = DragonflySimulator(TOPO, SimParams(seed=0))
+    with pytest.raises(ValueError):
+        sim.run_phase(src, dst, size, RoutingPolicy(RoutingMode.ADAPTIVE_0),
+                      allocation=al, tenants=seg)
+
+
+# --------------------------------------------------------------------------
+# Per-tenant observables: the K+1 link-load rows sum to the global backlog,
+# and the per-tenant NIC counters partition the app totals.
+# --------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 3))
+def test_tenant_link_loads_sum_to_global(seed, k):
+    rng = np.random.default_rng(seed)
+    allocs, used = [], set()
+    for i in range(k):
+        pool = np.asarray(sorted(set(range(TOPO.params.n_nodes)) - used))
+        nodes = rng.choice(pool, size=8, replace=False)
+        used.update(int(x) for x in nodes)
+        from repro.dragonfly.topology import Allocation
+        allocs.append(Allocation(f"t{i}", tuple(int(x) for x in nodes)))
+    counts = [int(rng.integers(10, 80)) for _ in range(k)]
+    srcs, dsts, sizes = zip(*[_flows(a, seed=seed + i, n=c)
+                              for i, (a, c) in enumerate(zip(allocs,
+                                                             counts))])
+    seg = TenantSegments.of(allocs, counts)
+    sim = DragonflySimulator(TOPO, SimParams(seed=seed % 1000))
+    res = sim.run_phase(np.concatenate(srcs), np.concatenate(dsts),
+                        np.concatenate(sizes),
+                        RoutingPolicy(RoutingMode.ADAPTIVE_0), tenants=seg)
+    assert res.tenant_link_loads.shape == (k + 1, TOPO.n_links)
+    np.testing.assert_allclose(res.tenant_link_loads.sum(axis=0),
+                               res.link_load_q, rtol=1e-9, atol=1e-6)
+    # NIC counters partition the app totals across tenants exactly
+    flits = sum(sim.counters[a.allocation_id].request_flits
+                for a in allocs)
+    packets = sum(sim.counters[a.allocation_id].request_packets
+                  for a in allocs)
+    assert flits == int(res.flits.sum())
+    assert packets == int(res.packets.sum())
+    # per-tenant nonmin fractions are fractions
+    assert res.tenant_nonmin_fraction.shape == (k,)
+    assert (res.tenant_nonmin_fraction >= 0).all()
+    assert (res.tenant_nonmin_fraction <= 1 + 1e-12).all()
+
+
+def test_tenant_of_survives_statistical_subsampling():
+    al1 = make_allocation(TOPO, 8, spread="inter_groups", seed=1,
+                          allocation_id="a")
+    al2 = make_allocation(TOPO, 8, spread="contiguous", seed=9,
+                          allocation_id="b")
+    n1, n2 = 300, 200
+    s1, d1, b1 = _flows(al1, seed=1, n=n1)
+    s2, d2, b2 = _flows(al2, seed=2, n=n2)
+    seg = TenantSegments.of([al1, al2], [n1, n2])
+    sim = DragonflySimulator(TOPO, SimParams(seed=0, max_flows=128))
+    res = sim.run_phase(np.concatenate([s1, s2]), np.concatenate([d1, d2]),
+                        np.concatenate([b1, b2]),
+                        RoutingPolicy(RoutingMode.ADAPTIVE_0), tenants=seg)
+    assert res.tenant_of.shape == (128,)       # remapped, not truncated
+    assert set(np.unique(res.tenant_of)) <= {0, 1}
+    np.testing.assert_allclose(res.tenant_link_loads.sum(axis=0),
+                               res.link_load_q, rtol=1e-9, atol=1e-6)
+
+
+def test_bg_flows_avoid_tenant_union():
+    al1 = make_allocation(TOPO, 10, spread="contiguous", seed=2,
+                          allocation_id="a")
+    al2 = make_allocation(TOPO, 10, spread="contiguous", seed=7,
+                          allocation_id="b")
+    seg = TenantSegments.of([al1, al2], [1, 1])
+    union = set(seg.union_allocation.nodes)
+    assert union == set(al1.nodes) | set(al2.nodes)
+    sim = DragonflySimulator(TOPO, SimParams(seed=0))
+    for _ in range(20):
+        bg = sim._bg_flows(seg.union_allocation)
+        assert not (set(bg[0].tolist()) & union)
+        assert not (set(bg[1].tolist()) & union)
+
+
+# --------------------------------------------------------------------------
+# reset_queues contract (shared-vs-isolated)
+# --------------------------------------------------------------------------
+def test_reset_queues_clears_estimates_too():
+    sim = DragonflySimulator(TOPO, SimParams(seed=0))
+    # occupancy left behind by a previous tenant's phases
+    sim.link_queue_s[:] = 1e-3
+    sim.est_memory_s[:] = 2e-3
+    sim.reset_queues(include_estimates=False)   # legacy partial reset
+    assert not sim.link_queue_s.any()
+    assert sim.est_memory_s.any()               # stale memory leaks through
+    sim.reset_queues()                          # full isolation reset
+    assert not sim.link_queue_s.any()
+    assert not sim.est_memory_s.any()
+
+
+# --------------------------------------------------------------------------
+# policy layer: tuple-valued (tenant, site) keys and per-tenant slicing
+# --------------------------------------------------------------------------
+def test_decision_batch_groups_tuple_sites():
+    b = DecisionBatch.of(np.ones(8), site=("tenantA", "alltoall"),
+                         kind=KIND_ALLTOALL)
+    groups = list(b.groups())
+    assert len(groups) == 1
+    site, kind, rows = groups[0]
+    assert site == ("tenantA", "alltoall") and kind == KIND_ALLTOALL
+    assert rows.shape == (8,)
+
+
+def test_shared_engine_scoped_site_slicing():
+    eng = make_engine("app_aware", granularity="phase")
+    for tenant, nbytes in (("a", 1024.0), ("b", 4 << 20)):
+        batch = DecisionBatch.of(np.full(16, nbytes),
+                                 site=(tenant, "phase0"))
+        eng.decide(batch)
+        eng.bus.publish_flow_arrays(np.full(16, 5.0), np.zeros(16))
+    pol = eng.policy
+    keys = pol.site_keys()
+    assert ("a", "phase0") in keys and ("b", "phase0") in keys
+    # tenant a's tiny messages are gated to the small-message mode;
+    # tenant b's 4MiB ones start on mode A — the scoped filters see the
+    # two tenants' DIFFERENT ledgers inside the one shared table
+    fa = pol.traffic_fraction(RoutingMode.ADAPTIVE_3,
+                              site_filter=scoped_site_filter("a"))
+    fb = pol.traffic_fraction(RoutingMode.ADAPTIVE_0,
+                              site_filter=scoped_site_filter("b"))
+    assert fa == 1.0 and fb == 1.0
+    # the unfiltered view merges both (byte-weighted, dominated by b)
+    merged = pol.traffic_fraction(RoutingMode.ADAPTIVE_0)
+    assert 0.99 < merged < 1.0
+
+
+def test_serve_scoped_kv_site_and_shared_engine():
+    from repro.serve.engine import route_kv_transfer
+
+    class _FakePerf:
+        latency_cycles = 1000.0
+        stall_cycles_per_flit = 0.1
+
+    class _FakeCost:
+        def predict(self, nbytes, mode):
+            return _FakePerf()
+
+    eng = make_engine("app_aware", mode_a="DIRECT", mode_b="HIER",
+                      granularity="message")
+    for alloc_id in ("job0", "job1"):
+        mode = route_kv_transfer(eng, _FakeCost(), 1 << 20,
+                                 site=(alloc_id, "kv_transfer"))
+        assert mode == "DIRECT"
+    keys = eng.policy.site_keys()
+    assert ("job0", "kv_transfer") in keys
+    assert ("job1", "kv_transfer") in keys
+
+
+# --------------------------------------------------------------------------
+# interference engine + sweep
+# --------------------------------------------------------------------------
+def test_interference_mix_reports_and_determinism():
+    eng = InterferenceEngine(TOPO, SimParams(seed=11), seed=11)
+    res1 = eng.run_mix(_mix2(), rounds=2)
+    res2 = InterferenceEngine(TOPO, SimParams(seed=11),
+                              seed=11).run_mix(_mix2(), rounds=2)
+    assert [t.time_us for t in res1.tenants] \
+        == [t.time_us for t in res2.tenants]
+    assert res1.victim_report.name == "vic"
+    assert all(t.slowdown is not None and t.slowdown > 0
+               for t in res1.tenants)
+    assert all(t.nic.request_flits > 0 for t in res1.tenants)
+    assert res1.tenant_link_loads.shape == (3, TOPO.n_links)
+
+
+def test_materialize_disjoint_and_deterministic():
+    mix = _mix2()
+    a1 = mix.materialize(TOPO, seed=4)
+    a2 = mix.materialize(TOPO, seed=4)
+    assert [a.nodes for a in a1] == [a.nodes for a in a2]
+    assert not (set(a1[0].nodes) & set(a1[1].nodes))
+    assert len(a1[0].nodes) == 16 and len(a1[1].nodes) == 24
+
+
+def test_sweep_grid_records():
+    arms = {"adaptive": RoutingMode.ADAPTIVE_0, "app_aware": "app_aware"}
+    recs = sweep(TOPO, [_mix2()], arms,
+                 params=SimParams(seed=2, bg_enable=False), rounds=2,
+                 seed=2)
+    assert len(recs) == 2
+    assert {r["policy"] for r in recs} == set(arms)
+    for r in recs:
+        assert r["victim"] == "vic"
+        assert r["victim_slowdown"] > 0
+        assert set(r["aggressor_slowdowns"]) == {"agg"}
+
+
+def test_engine_arm_tenant_uses_policy_engine():
+    mix = TenancyMix("aa-mix", (
+        Workload("vic", "alltoall", 12, {"size_per_pair": 8192},
+                 arm="app_aware"),
+        Workload("agg", "alltoall", 12, {"size_per_pair": 32768},
+                 arm=RoutingMode.ADAPTIVE_0)))
+    eng = InterferenceEngine(TOPO, SimParams(seed=6), seed=6)
+    res = eng.run_mix(mix, rounds=2, baselines=False)
+    assert res.victim_report.arm == "app_aware"
+    assert res.victim_report.time_us > 0
+
+
+# --------------------------------------------------------------------------
+# moe_alltoall traffic pattern
+# --------------------------------------------------------------------------
+def test_moe_alltoall_pattern():
+    phases = moe_alltoall(8, tokens_per_rank=128, token_bytes=64)
+    assert len(phases) == 2                     # dispatch + combine
+    (s1, d1, b1), (s2, d2, b2) = phases
+    assert len(b1) == 8 * 7 and len(b2) == 8 * 7
+    assert b1.max() > b1.min()                  # zipf skew
+    # combine is the transpose of dispatch: same pair sizes, reversed
+    m1 = {(int(a), int(b)): v for a, b, v in zip(s1, d1, b1)}
+    m2 = {(int(a), int(b)): v for a, b, v in zip(s2, d2, b2)}
+    assert m2 == {(b, a): v for (a, b), v in m1.items()}
+    assert "moe_alltoall" in PATTERNS
+    assert PATTERN_KIND["moe_alltoall"] == KIND_ALLTOALL
