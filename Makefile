@@ -11,6 +11,7 @@ test:
 
 # reduced benchmark pass (the CI perf smoke; --full is the paper-scale run)
 bench-smoke:
+	$(PY) scripts/ci_lint.py --topology
 	PYTHONPATH=src $(PY) -m benchmarks.run --only fig7,fig8,tpu --policy app_aware
 	PYTHONPATH=src $(PY) -m benchmarks.interference_matrix --smoke \
 		--out BENCH_interference.json
@@ -30,6 +31,7 @@ bench-interference:
 lint:
 	$(PY) -m compileall -q src benchmarks examples tests
 	$(PY) scripts/ci_lint.py
+	$(PY) scripts/ci_lint.py --topology
 
 # documentation health: README/docs internal links resolve, and no
 # __pycache__/*.pyc is tracked in git

@@ -12,7 +12,7 @@ import numpy as np
 from repro.core.noise import qcd
 from repro.core.strategies import RoutingMode
 from repro.dragonfly import (DragonflySimulator, DragonflyTopology,
-                             SimParams, TopologyParams)
+                             SimParams, TopologyParams, make_topology)
 from repro.dragonfly.routing import RoutingPolicy
 from repro.dragonfly.topology import make_allocation
 from repro.dragonfly.traffic import PATTERNS, run_benchmark, run_iteration
@@ -20,6 +20,22 @@ from repro.dragonfly.traffic import PATTERNS, run_benchmark, run_iteration
 # "Piz-Daint-like" (large) and "Cori-like" (small) topologies for Fig 8/9
 DAINT = TopologyParams(n_groups=12)
 CORI = TopologyParams(n_groups=8)
+
+
+def bench_topology(spec, fallback: TopologyParams):
+    """Resolve a benchmark's --topology axis (docs/topology.md).
+
+    spec None keeps the suite's canonical Aries machine (`fallback`);
+    otherwise any make_topology spec ("dragonfly_plus:p=4,...", a
+    registered name, or a Topology instance) swaps the machine out."""
+    if spec is None:
+        return DragonflyTopology(fallback)
+    return make_topology(spec)
+
+
+def group_spread(topo, k: int) -> str:
+    """'groups:k' clamped to machines with fewer than k groups."""
+    return f"groups:{min(k, topo.n_groups)}"
 
 
 def emit(name: str, us: float, derived: str = "") -> None:

@@ -10,9 +10,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import DAINT, MODE_LABEL, emit
+from benchmarks.common import (DAINT, MODE_LABEL, bench_topology, emit,
+                               group_spread)
 from repro.core.strategies import RoutingMode
-from repro.dragonfly import DragonflySimulator, DragonflyTopology, SimParams
+from repro.dragonfly import DragonflySimulator, SimParams
 from repro.dragonfly.routing import RoutingPolicy
 from repro.dragonfly.topology import make_allocation
 from repro.dragonfly.traffic import (PATTERN_KIND, PATTERNS, engine_for_arm,
@@ -34,8 +35,10 @@ APPS = {
 def run_app(topo, name, pattern, args, ranks, comm_frac, iters, seed=0,
             policy: str = "app_aware"):
     modes = (RoutingMode.ADAPTIVE_0, RoutingMode.ADAPTIVE_3, policy)
+    ranks = min(ranks, topo.n_nodes)
     sim = DragonflySimulator(topo, SimParams(seed=seed, max_flows=40_000))
-    al = make_allocation(topo, ranks, spread="groups:6", seed=seed)
+    al = make_allocation(topo, ranks, spread=group_spread(topo, 6),
+                         seed=seed)
     phases = PATTERNS[pattern](ranks, **args)
     kind = PATTERN_KIND[pattern]
     engine = engine_for_arm(policy, sim, seed=seed)
@@ -57,8 +60,8 @@ def run_app(topo, name, pattern, args, ranks, comm_frac, iters, seed=0,
     return out
 
 
-def main(full: bool = False, policy: str = "app_aware"):
-    topo = DragonflyTopology(DAINT)
+def main(full: bool = False, policy: str = "app_aware", topology=None):
+    topo = bench_topology(topology, DAINT)
     iters = 8 if full else 4
     modes = (RoutingMode.ADAPTIVE_0, RoutingMode.ADAPTIVE_3, policy)
     apps = APPS if full else {k: APPS[k] for k in

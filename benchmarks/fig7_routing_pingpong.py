@@ -9,10 +9,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import DAINT, boxstats, emit
+from benchmarks.common import DAINT, bench_topology, boxstats, emit
 from repro.core.perf_model import predict_transmission_cycles
 from repro.core.strategies import RoutingMode
-from repro.dragonfly import DragonflySimulator, DragonflyTopology, SimParams
+from repro.dragonfly import DragonflySimulator, SimParams
 from repro.dragonfly.topology import make_allocation
 from repro.dragonfly.traffic import pingpong, run_iteration_engine
 from repro.policy import PolicyEngine, StaticPolicy, TelemetryBus
@@ -21,8 +21,8 @@ SIZE = 4 << 20
 MODES = (RoutingMode.ADAPTIVE_0, RoutingMode.ADAPTIVE_3)
 
 
-def run(iters: int = 40, seeds: int = 4):
-    topo = DragonflyTopology(DAINT)
+def run(iters: int = 40, seeds: int = 4, topology=None):
+    topo = bench_topology(topology, DAINT)
     out = {}
     for tier, label in (("inter_chassis", "intra_group"),
                         ("inter_groups", "inter_groups")):
@@ -54,8 +54,9 @@ def run(iters: int = 40, seeds: int = 4):
     return out
 
 
-def main(full: bool = False):
-    res = run(iters=50 if full else 25, seeds=4 if full else 3)
+def main(full: bool = False, topology=None):
+    res = run(iters=50 if full else 25, seeds=4 if full else 3,
+              topology=topology)
     for tier, modes in res.items():
         for m, d in modes.items():
             name = "adaptive" if m is RoutingMode.ADAPTIVE_0 else "highbias"

@@ -9,9 +9,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import CORI, DAINT, MODE_LABEL, boxstats, emit
+from benchmarks.common import (CORI, DAINT, MODE_LABEL, bench_topology,
+                               boxstats, emit, group_spread)
 from repro.core.strategies import RoutingMode
-from repro.dragonfly import DragonflySimulator, DragonflyTopology, SimParams
+from repro.dragonfly import DragonflySimulator, SimParams
 from repro.dragonfly.topology import make_allocation
 from repro.dragonfly.traffic import run_benchmark
 
@@ -28,16 +29,20 @@ SWEEP = {
 
 def run(machine: str = "daint", iters: int = 8, seed: int = 0,
         max_flows: int = 60_000, full_scale: bool = True,
-        policy: str = "app_aware"):
+        policy: str = "app_aware", topology=None):
     """`policy` picks the adaptive arm ("app_aware" | "eps_greedy" |
-    "static") — the repro.policy engine driving the third column."""
+    "static") — the repro.policy engine driving the third column.
+    `topology` (a make_topology spec) swaps the machine out for both
+    the daint- and cori-shaped passes; ranks are capped to fit."""
     modes = (RoutingMode.ADAPTIVE_0, RoutingMode.ADAPTIVE_3, policy)
     if machine == "daint":
-        topo = DragonflyTopology(DAINT)
-        n_ranks, groups = (1024 if full_scale else 256), "groups:6"
+        topo = bench_topology(topology, DAINT)
+        n_ranks, groups = ((1024 if full_scale else 256),
+                           group_spread(topo, 6))
     else:
-        topo = DragonflyTopology(CORI)
-        n_ranks, groups = 64, "groups:5"
+        topo = bench_topology(topology, CORI)
+        n_ranks, groups = 64, group_spread(topo, 5)
+    n_ranks = min(n_ranks, topo.n_nodes)
     out = {}
     for bench, sweeps in SWEEP.items():
         for args in sweeps:
@@ -67,14 +72,14 @@ def run(machine: str = "daint", iters: int = 8, seed: int = 0,
     return out
 
 
-def main(full: bool = False, policy: str = "app_aware"):
+def main(full: bool = False, policy: str = "app_aware", topology=None):
     label = MODE_LABEL[policy]
     for machine, tag in (("daint", "fig8"), ("cori", "fig9")):
         if not full and machine == "cori":
             continue
         res = run(machine, iters=10 if full else 4,
                   max_flows=80_000 if full else 30_000,
-                  full_scale=full, policy=policy)
+                  full_scale=full, policy=policy, topology=topology)
         wins = 0
         cells = 0
         for key, row in res.items():

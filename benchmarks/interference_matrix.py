@@ -12,9 +12,14 @@ Qualitative reproduction targets (Kang et al.):
     app-aware arm keep the victim closer to run-alone than leaving it
     fully adaptive — in at least one mix app_aware < adaptive.
 
+The matrix also carries the topology axis (docs/topology.md): the last
+mix re-runs the first on a Dragonfly+ machine via `TenancyMix.topology`,
+and ``--topology`` swaps the default machine for every other row.
+
 Emits the ``name,us_per_call,derived`` CSV rows all benchmarks print,
-plus ``BENCH_interference.json`` (schema bench_interference/v1, checked
-by ``scripts/ci_lint.py --bench``; `make bench-interference` runs both).
+plus ``BENCH_interference.json`` (schema bench_interference/v2 — every
+cell records the topology it ran on — checked by
+``scripts/ci_lint.py --bench``; `make bench-interference` runs both).
 """
 
 from __future__ import annotations
@@ -25,10 +30,16 @@ import pathlib
 
 from benchmarks.common import emit
 from repro.core.strategies import RoutingMode
-from repro.dragonfly import DragonflyTopology, SimParams, TopologyParams
+from repro.dragonfly import SimParams, make_topology
 from repro.tenancy import TenancyMix, Workload, sweep
 
-SCHEMA = "bench_interference/v1"
+SCHEMA = "bench_interference/v2"
+
+#: the default machine (the paper-like Aries layout) and the non-Aries
+#: probe row's machine (a Dragonfly+ big enough for the same mix)
+DEFAULT_TOPOLOGY = "aries:n_groups=6,chassis_per_group=2," \
+                   "blades_per_chassis=8"
+DPLUS_TOPOLOGY = "dragonfly_plus:p=4,a_leaf=8,a_spine=8,h=2,g=17"
 
 #: the victim's candidate routing arms (the matrix columns)
 ARMS = {
@@ -68,12 +79,19 @@ def make_mixes(scale: float = 1.0) -> list:
                      {"size_per_pair": 16384}, **a2a),
             Workload("alltoall_b", "alltoall", r(64),
                      {"size_per_pair": 16384}, **a2a))),
+        # the topology axis: the first mix again, on a Dragonfly+ machine
+        TenancyMix("halo3d-vs-alltoall@dplus", (
+            Workload("halo3d", "halo3d", r(64),
+                     {"nx": 64, "var_bytes": 8, "vars_": 4}),
+            Workload("alltoall", "alltoall", r(96),
+                     {"size_per_pair": 8192}, **a2a)),
+            topology=DPLUS_TOPOLOGY),
     ]
 
 
-def run(rounds: int, scale: float, seed: int, out_path: str | None):
-    topo = DragonflyTopology(TopologyParams(n_groups=6, chassis_per_group=2,
-                                            blades_per_chassis=8))
+def run(rounds: int, scale: float, seed: int, out_path: str | None,
+        topology: str | None = None):
+    topo = make_topology(topology or DEFAULT_TOPOLOGY)
     # ambient background OFF: the matrix isolates CO-TENANT interference
     # (the heavy-tailed ambient bg is a different noise source, measured
     # by fig3/fig4; its pareto draws would also decorrelate the run-alone
@@ -86,6 +104,7 @@ def run(rounds: int, scale: float, seed: int, out_path: str | None):
     matrix: dict = {}
     for rec in records:
         cell = {
+            "topology": rec["topology"],
             "victim_slowdown": rec["victim_slowdown"],
             "victim_time_us": rec["victim_time_us"],
             "victim_alone_us": rec["victim_alone_us"],
@@ -116,8 +135,7 @@ def run(rounds: int, scale: float, seed: int, out_path: str | None):
         "schema": SCHEMA,
         "rounds": int(rounds),
         "seed": int(seed),
-        "topology": {"n_groups": 6, "n_links": int(topo.n_links),
-                     "n_nodes": int(topo.params.n_nodes)},
+        "topology": topo.describe(),
         "mixes": [m.name for m in mixes],
         "policies": list(ARMS),
         "matrix": matrix,
@@ -134,11 +152,11 @@ def run(rounds: int, scale: float, seed: int, out_path: str | None):
 
 
 def main(full: bool = False, smoke: bool = False,
-         out: str | None = None) -> dict:
+         out: str | None = None, topology: str | None = None) -> dict:
     rounds, scale = (8, 1.0) if not smoke else (3, 0.375)
     if full:
         rounds, scale = 12, 1.0
-    return run(rounds, scale, seed=7, out_path=out)
+    return run(rounds, scale, seed=7, out_path=out, topology=topology)
 
 
 if __name__ == "__main__":
@@ -150,5 +168,10 @@ if __name__ == "__main__":
     ap.add_argument("--out", default="BENCH_interference.json",
                     help="output JSON path "
                          "(default: BENCH_interference.json)")
+    ap.add_argument("--topology", default=None,
+                    help="make_topology spec for the default machine "
+                         "(mixes with their own topology keep it); "
+                         f"default: {DEFAULT_TOPOLOGY}")
     args = ap.parse_args()
-    main(full=args.full, smoke=args.smoke, out=args.out)
+    main(full=args.full, smoke=args.smoke, out=args.out,
+         topology=args.topology)

@@ -20,6 +20,11 @@ def main(argv=None) -> None:
                     help="adaptive arm for the policy-driven suites "
                          "(fig8, fig10): which repro.policy engine to run "
                          "against the static Default/HIGH-BIAS arms")
+    ap.add_argument("--topology", default=None,
+                    help="make_topology spec swapping the machine for the "
+                         "topology-aware suites (fig7, fig8, fig10, "
+                         "interference), e.g. 'dragonfly_plus:p=4,"
+                         "a_leaf=8,a_spine=8,h=2,g=17' (docs/topology.md)")
     args = ap.parse_args(argv)
 
     from benchmarks import (fig3_allocation, fig4_fig5_hostnoise,
@@ -41,11 +46,15 @@ def main(argv=None) -> None:
     }
     #: suites whose adaptive arm is a pluggable repro.policy engine
     policy_suites = {"fig8", "fig10"}
+    #: suites that accept the --topology machine swap
+    topology_suites = {"fig7", "fig8", "fig10", "interference"}
     chosen = (args.only.split(",") if args.only else list(suites))
     print("name,us_per_call,derived")
     for key in chosen:
         t0 = time.time()
         kw = {"policy": args.policy} if key in policy_suites else {}
+        if key in topology_suites and args.topology:
+            kw["topology"] = args.topology
         suites[key](full=args.full, **kw)
         print(f"# {key} done in {time.time() - t0:.1f}s", file=sys.stderr)
 

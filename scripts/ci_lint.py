@@ -6,7 +6,11 @@ integrity + no stray __pycache__/*.pyc tracked in git.
 ``--bench`` mode (the Makefile `bench-perf` / `bench-interference`
 targets): BENCH_sim.json exists and parses against its schema
 (docs/performance.md), and BENCH_interference.json — when present —
-matches bench_interference/v1 (docs/interference.md).
+matches bench_interference/v1 or /v2 (docs/interference.md; v2 records
+the topology per cell).
+``--topology`` mode (`make lint` / bench-smoke): instantiates every
+registered topology at small scale and runs the structural invariant
+battery headlessly (docs/topology.md) — needs numpy + src on the path.
 """
 
 import argparse
@@ -162,9 +166,12 @@ def lint_bench_interference_schema(require: bool = False) -> list:
         elif not isinstance(doc[key], typ):
             bad.append(f"BENCH_interference.json: {key!r} should be "
                        f"{typ.__name__}")
-    if doc.get("schema") not in (None, "bench_interference/v1"):
-        bad.append(f"BENCH_interference.json: unknown schema "
-                   f"{doc.get('schema')!r}")
+    schema = doc.get("schema")
+    if schema not in (None, "bench_interference/v1",
+                      "bench_interference/v2"):
+        bad.append(f"BENCH_interference.json: unknown schema {schema!r}")
+    # v2: every cell must say which topology it ran on
+    want_topology = schema == "bench_interference/v2"
     for mix, row in (doc.get("matrix") or {}).items():
         for policy in (doc.get("policies") or list(row)):
             cell = row.get(policy)
@@ -176,9 +183,39 @@ def lint_bench_interference_schema(require: bool = False) -> list:
                 if not isinstance(cell.get(f), (int, float)):
                     bad.append(f"BENCH_interference.json: matrix.{mix}."
                                f"{policy}.{f} missing or non-numeric")
+            if want_topology and not isinstance(cell.get("topology"), str):
+                bad.append(f"BENCH_interference.json: matrix.{mix}."
+                           f"{policy}.topology missing or not a string "
+                           f"(required by {schema})")
             if not isinstance(cell.get("aggressor_slowdowns", {}), dict):
                 bad.append(f"BENCH_interference.json: matrix.{mix}."
                            f"{policy}.aggressor_slowdowns should be a dict")
+    return bad
+
+
+def lint_topology_invariants() -> list:
+    """Every registered topology passes the invariant battery at its
+    small scale (repro.dragonfly.invariants.check_all)."""
+    sys.path.insert(0, str(ROOT / "src"))
+    try:
+        from repro.dragonfly.invariants import (InvariantViolation,
+                                                check_all)
+        from repro.dragonfly.topology import (registered_topologies,
+                                              small_topology)
+    except ImportError as e:
+        return [f"--topology: cannot import repro.dragonfly ({e})"]
+    bad = []
+    for name in registered_topologies():
+        try:
+            topo = small_topology(name)
+            check_all(topo, n_pairs=128)
+        except InvariantViolation as e:
+            bad.append(f"topology {name!r}: {e}")
+        except Exception as e:  # construction/battery crash
+            bad.append(f"topology {name!r}: {type(e).__name__}: {e}")
+        else:
+            print(f"# topology {name}: ok ({topo.spec_str()})",
+                  file=sys.stderr)
     return bad
 
 
@@ -190,8 +227,13 @@ def main(argv=None) -> int:
                          "Python style")
     ap.add_argument("--bench", action="store_true",
                     help="require BENCH_sim.json and check its schema")
+    ap.add_argument("--topology", action="store_true",
+                    help="run the topology-family invariant battery on "
+                         "every registered topology at small scale")
     args = ap.parse_args(argv)
-    if args.bench:
+    if args.topology:
+        bad = lint_topology_invariants()
+    elif args.bench:
         bad = (lint_bench_schema(require=True)
                + lint_bench_interference_schema())
     elif args.docs:

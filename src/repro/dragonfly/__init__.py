@@ -10,7 +10,10 @@
 # crossover, alltoall spreading preference, heavy outlier tails), not
 # cycle-accuracy.
 
-from repro.dragonfly.topology import DragonflyTopology, TopologyParams, Allocation
+from repro.dragonfly.topology import (Allocation, DragonflyTopology,
+                                      Topology, TopologyParams,
+                                      make_topology, registered_topologies,
+                                      small_topology)
 from repro.dragonfly.routing import RoutingPolicy
 from repro.dragonfly.simulator import (DragonflySimulator, SimParams,
                                        FlowResult, PhasePlan,
@@ -21,7 +24,9 @@ from repro.dragonfly.traffic import (
 )
 
 __all__ = [
-    "DragonflyTopology", "TopologyParams", "Allocation", "RoutingPolicy",
+    "DragonflyTopology", "Topology", "TopologyParams", "Allocation",
+    "make_topology", "registered_topologies", "small_topology",
+    "RoutingPolicy",
     "DragonflySimulator", "SimParams", "FlowResult", "PhasePlan",
     "TenantSegments",
     "pingpong", "allreduce", "alltoall", "barrier", "broadcast", "halo3d",

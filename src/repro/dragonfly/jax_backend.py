@@ -102,7 +102,7 @@ def fixed_point_jax(sim, *, score0, safe, valid, hops, est_queue_s,
     """
     del est_queue_s, hl_rows, is_nonmin, bias_rows, posinf, neginf  # folded
     p = sim.params
-    tp = sim.topo.params
+    tp = sim.topo   # Topology protocol attrs (identical for every family)
     f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
     i32 = functools.partial(jnp.asarray, dtype=jnp.int32)
     out = _pipeline(

@@ -58,7 +58,8 @@ from repro.core.perf_model import MAX_OUTSTANDING_PACKETS
 from repro.core.strategies import RoutingMode
 from repro.dragonfly.routing import (RoutingPolicy, apply_bias,
                                      row_bias_terms, softmin_weights)
-from repro.dragonfly.topology import PAD, Allocation, DragonflyTopology
+from repro.dragonfly.topology import (PAD, Allocation, DragonflyTopology,
+                                      Topology, make_topology)
 
 #: simulator compute backends (SimParams.backend)
 BACKENDS = ("numpy", "jax")
@@ -121,6 +122,11 @@ class SimParams:
     #: or "jax" (jitted pipeline + Pallas segment-sum on TPU; falls back to
     #: numpy with a warning when jax is unusable).  docs/performance.md.
     backend: str = "numpy"
+    #: topology spec resolved by make_topology when the simulator is built
+    #: without an explicit Topology instance: a registered name ("aries",
+    #: "dragonfly", "dragonfly_plus", "fattree") optionally with kwargs,
+    #: e.g. "dragonfly:p=2,a=4,h=2".  docs/topology.md.
+    topology: str = "aries"
     #: accumulate per-stage wall times into sim.stage_time_s (perf_sim.py)
     profile_stages: bool = False
 
@@ -267,12 +273,15 @@ class PhasePlan:
 
 
 class DragonflySimulator:
-    def __init__(self, topo: DragonflyTopology,
+    def __init__(self, topo: Topology | None = None,
                  params: SimParams = SimParams()):
         if params.backend not in BACKENDS:
             raise ValueError(f"unknown backend {params.backend!r}; "
                              f"expected one of {BACKENDS}")
-        self.topo = topo
+        # topo=None resolves params.topology ("aries", "dragonfly:p=2,...",
+        # any registered family spec) through make_topology
+        self.topo = topo = make_topology(topo if topo is not None
+                                         else params.topology)
         self.params = params
         self.rng = np.random.default_rng(params.seed)
         self.link_queue_s = np.zeros(topo.n_links)  # seconds-to-drain units
@@ -282,8 +291,8 @@ class DragonflySimulator:
         self.total_flits_all_jobs: float = 0.0
         self._phase_count = 0
         self._hot_groups = self.rng.choice(
-            topo.params.n_groups,
-            size=min(params.bg_hot_groups, topo.params.n_groups),
+            topo.n_groups,
+            size=min(params.bg_hot_groups, topo.n_groups),
             replace=False)
         self._plan_cache: dict = {}
         #: accumulated per-stage wall time (params.profile_stages)
@@ -314,13 +323,13 @@ class DragonflySimulator:
         n = p.bg_flows_per_phase
         if not p.bg_enable or n == 0:
             return None
-        tp = self.topo.params
+        tp = self.topo
         self._phase_count += 1
         if self._phase_count % max(1, p.bg_rotate_phases) == 0:
             self._hot_groups = self.rng.choice(
                 tp.n_groups, size=min(p.bg_hot_groups, tp.n_groups),
                 replace=False)
-        nodes_per_group = tp.routers_per_group * tp.nodes_per_blade
+        nodes_per_group = tp.nodes_per_group
         ours = np.asarray(allocation.nodes) if allocation is not None \
             else np.empty(0, dtype=np.int64)
         # nodes outside the allocation (the disjointness fallback pool);
@@ -782,7 +791,7 @@ class DragonflySimulator:
         contribute, and skipping their exact-0.0 terms leaves every
         float64 accumulation bit-identical to the dense gathers."""
         p = self.params
-        tp = self.topo.params
+        tp = self.topo
         n, ncand = w.shape
         if hops is None:
             hops = valid.sum(axis=-1)                   # [n, ncand]

@@ -26,11 +26,195 @@ per §2.2 — we cap per topology size).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Iterable, Sequence
+from typing import Callable, Iterable, Mapping, Sequence
 
 import numpy as np
 
 PAD = -1  # path padding entry
+
+
+def balanced_global_count(a: int, h: int) -> int:
+    """The balanced-dragonfly rule ``g = a*h + 1`` (every pair of groups
+    gets exactly one global link when each of the `a` routers per group
+    owns `h` global ports)."""
+    return a * h + 1
+
+
+class Topology:
+    """Abstract base of the topology family (docs/topology.md).
+
+    A concrete topology is a router graph with arithmetic DIRECTED link
+    ids plus one NIC injection link per node, exposing exactly the
+    surface the simulator, allocations, and the invariant harness
+    consume.  Subclasses set in ``__init__``:
+
+      n_links, n_nodes, n_routers, n_groups   sizes
+      nodes_per_group                         node ids are contiguous per
+                                              group: node // nodes_per_group
+                                              is its group
+      nodes_per_router, n_node_routers        node ids are contiguous per
+                                              node-hosting router
+      capacity_gbs                            float64 [n_links], GB/s/dir
+      hop_latency_ns, nic_latency_ns          fixed per-hop / NIC latency
+      max_minimal_hops, max_nonmin_hops       hop bounds checked by
+                                              repro.dragonfly.invariants
+      valiant_transits_group                  True when inter-group Valiant
+                                              paths visit exactly one
+                                              intermediate group
+
+    and implement ``link_ranges``, ``link_endpoints``,
+    ``expected_router_degree``, ``router_of_node`` and
+    ``candidate_paths``.  ``candidates()`` is the stable front door.
+    """
+
+    name: str = "abstract"
+    MAX_HOPS = 8
+    valiant_transits_group: bool = True
+
+    # ------------------------------------------------------------- structure
+    def link_ranges(self) -> dict:
+        """{kind: (lo, hi)} — half-open link-id ranges, one per link
+        class, partitioning [0, n_links)."""
+        raise NotImplementedError
+
+    def link_endpoints(self):
+        """(src_router, dst_router) int64 [n_links] arrays.
+
+        NIC links have ``src == -1`` (node side) and ``dst`` the host
+        router; arithmetic slots that no physical link occupies (e.g.
+        diagonal / non-canonical pair encodings) are (-1, -1)."""
+        raise NotImplementedError
+
+    def expected_router_degree(self) -> np.ndarray:
+        """Spec-side outgoing router-router degree per router, checked
+        against the measured ``link_endpoints`` degrees."""
+        raise NotImplementedError
+
+    def router_of_node(self, node):
+        raise NotImplementedError
+
+    def group_of_node(self, node):
+        return np.asarray(node) // self.nodes_per_group
+
+    def group_of_router(self, router):
+        raise NotImplementedError
+
+    def link_kind(self, link: int) -> str:
+        for kind, (lo, hi) in self.link_ranges().items():
+            if lo <= link < hi:
+                return kind
+        raise ValueError(f"link id {link} out of range")
+
+    def nic_link(self, node):
+        raise NotImplementedError
+
+    # --------------------------------------------------------------- routing
+    def candidate_paths(self, src, dst, rng, n_min: int = 2,
+                        n_nonmin: int = 2):
+        """(links [n, n_min+n_nonmin, MAX_HOPS] PAD-padded,
+        is_nonmin [n_min+n_nonmin]) — minimal then Valiant candidates."""
+        raise NotImplementedError
+
+    def candidates(self, src, dst, rng=None, *, n_min: int = 2,
+                   n_nonmin: int = 2):
+        """The Topology front door: padded minimal + Valiant path arrays
+        for each (src, dst) node pair.  ``rng`` seeds the per-flow
+        candidate draw (global-link / intermediate-group choices); None
+        means a fresh deterministic generator."""
+        if rng is None:
+            rng = np.random.default_rng(0)
+        return self.candidate_paths(src, dst, rng, n_min=n_min,
+                                    n_nonmin=n_nonmin)
+
+    # ------------------------------------------------------------------ misc
+    def spec_str(self) -> str:
+        """Short human/JSON label, e.g. ``dragonfly(p=2,a=4,h=2,g=9)``."""
+        return self.name
+
+    def describe(self) -> dict:
+        """JSON-able summary for benchmark records."""
+        return {"spec": self.spec_str(), "n_links": int(self.n_links),
+                "n_nodes": int(self.n_nodes),
+                "n_routers": int(self.n_routers),
+                "n_groups": int(self.n_groups)}
+
+
+# ----------------------------------------------------------------- registry
+@dataclass(frozen=True)
+class TopologyEntry:
+    """One registered topology: a factory plus small-scale kwargs the
+    invariant harness (tests + ``ci_lint.py --topology``) instantiates."""
+
+    name: str
+    factory: Callable
+    small: Mapping
+
+
+TOPOLOGY_REGISTRY: dict = {}
+
+
+def register_topology(name: str, factory: Callable, *, small: Mapping
+                      ) -> None:
+    TOPOLOGY_REGISTRY[name] = TopologyEntry(name, factory, dict(small))
+
+
+def registered_topologies() -> list:
+    _load_families()
+    return sorted(TOPOLOGY_REGISTRY)
+
+
+def small_topology(name: str) -> "Topology":
+    """The registered small-scale instance (invariant harness scale)."""
+    _load_families()
+    e = TOPOLOGY_REGISTRY[name]
+    return e.factory(**e.small)
+
+
+def _load_families():
+    # families.py registers itself on import; imported lazily to avoid a
+    # topology <-> families cycle at module load.
+    import repro.dragonfly.families  # noqa: F401
+
+
+def _coerce(v: str):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            continue
+    return v
+
+
+def make_topology(spec, **overrides) -> "Topology":
+    """Build a topology from a spec.
+
+    spec: a Topology instance (returned as-is), a registered name
+    ("aries", "dragonfly", ...), or "name:k=v,k2=v2" with int/float/str
+    values (e.g. ``"dragonfly:p=2,a=4,h=2"``).  The ``name(k=v,...)``
+    form emitted by ``Topology.spec_str()`` is accepted too, so recorded
+    specs round-trip.  Keyword overrides win over the spec string's
+    kwargs."""
+    if isinstance(spec, Topology):
+        return spec
+    _load_families()
+    spec = str(spec)
+    if "(" in spec and spec.endswith(")"):
+        name, _, argstr = spec[:-1].partition("(")
+    else:
+        name, _, argstr = spec.partition(":")
+    if name not in TOPOLOGY_REGISTRY:
+        raise ValueError(f"unknown topology {name!r}; registered: "
+                         f"{registered_topologies()}")
+    kwargs = {}
+    if argstr:
+        for item in argstr.split(","):
+            k, _, v = item.partition("=")
+            if not _ or not k:
+                raise ValueError(f"bad topology spec item {item!r} "
+                                 f"(want k=v)")
+            kwargs[k.strip()] = _coerce(v.strip())
+    kwargs.update(overrides)
+    return TOPOLOGY_REGISTRY[name].factory(**kwargs)
 
 
 @dataclass(frozen=True)
@@ -60,7 +244,16 @@ class TopologyParams:
         return self.n_routers * self.nodes_per_blade
 
 
-class DragonflyTopology:
+class DragonflyTopology(Topology):
+    """The canonical Cray Aries layout (the paper's machine) — the
+    topology-family default; link ids, capacities and candidate paths
+    are pinned bit-identical to the pre-family code by
+    tests/test_topology_family.py."""
+
+    name = "aries"
+    max_minimal_hops = 5     # Fig. 1's 5-hop example
+    max_nonmin_hops = 8
+
     def __init__(self, params: TopologyParams = TopologyParams()):
         p = self.params = params
         G, C, B = p.n_groups, p.chassis_per_group, p.blades_per_chassis
@@ -78,6 +271,129 @@ class DragonflyTopology:
         cap[self._glob_off:self._nic_off] = p.optical_gbs
         cap[self._nic_off:] = p.nic_gbs
         self.capacity_gbs = cap
+
+    # -------------------------------------------------- Topology protocol
+    @property
+    def n_nodes(self) -> int:
+        return self.params.n_nodes
+
+    @property
+    def n_routers(self) -> int:
+        return self.params.n_routers
+
+    @property
+    def n_groups(self) -> int:
+        return self.params.n_groups
+
+    @property
+    def nodes_per_group(self) -> int:
+        return self.params.routers_per_group * self.params.nodes_per_blade
+
+    @property
+    def nodes_per_router(self) -> int:
+        return self.params.nodes_per_blade
+
+    @property
+    def n_node_routers(self) -> int:
+        return self.params.n_routers    # every Aries router hosts nodes
+
+    @property
+    def hop_latency_ns(self) -> float:
+        return self.params.hop_latency_ns
+
+    @property
+    def nic_latency_ns(self) -> float:
+        return self.params.nic_latency_ns
+
+    def router_of_node(self, node):
+        return np.asarray(node) // self.params.nodes_per_blade
+
+    def group_of_router(self, router):
+        return np.asarray(router) // self.params.routers_per_group
+
+    def spec_str(self) -> str:
+        p = self.params
+        return (f"aries(n_groups={p.n_groups},"
+                f"chassis_per_group={p.chassis_per_group},"
+                f"blades_per_chassis={p.blades_per_chassis},"
+                f"nodes_per_blade={p.nodes_per_blade},"
+                f"global_links_per_pair={p.global_links_per_pair})")
+
+    def link_ranges(self) -> dict:
+        return {"chassis": (0, self._row_off),
+                "row": (self._row_off, self._glob_off),
+                "global": (self._glob_off, self._nic_off),
+                "nic": (self._nic_off, self.n_links)}
+
+    def link_endpoints(self):
+        p = self.params
+        G, C, B = p.n_groups, p.chassis_per_group, p.blades_per_chassis
+        K = p.global_links_per_pair
+        src = np.full(self.n_links, -1, dtype=np.int64)
+        dst = np.full(self.n_links, -1, dtype=np.int64)
+        # chassis: base = ((g*C + c)*B + lo)*B + hi, id = base*2 + (b1>b2)
+        ids = np.arange(self.n_chassis_links)
+        base, dirb = np.divmod(ids, 2)
+        hi = base % B
+        lo = (base // B) % B
+        c = (base // (B * B)) % C
+        g = base // (B * B * C)
+        ok = lo < hi
+        r_lo = (g * C + c) * B + lo
+        r_hi = (g * C + c) * B + hi
+        src[ids[ok]] = np.where(dirb[ok] == 1, r_hi[ok], r_lo[ok])
+        dst[ids[ok]] = np.where(dirb[ok] == 1, r_lo[ok], r_hi[ok])
+        # row: base = ((g*C + lo)*C + hi)*B + b, id = off + base*2 + (c1>c2)
+        ids = np.arange(self.n_row_links)
+        base, dirb = np.divmod(ids, 2)
+        b = base % B
+        hi = (base // B) % C
+        lo = (base // (B * C)) % C
+        g = base // (B * C * C)
+        ok = lo < hi
+        r_lo = (g * C + lo) * B + b
+        r_hi = (g * C + hi) * B + b
+        src[self._row_off + ids[ok]] = np.where(dirb[ok] == 1,
+                                                r_hi[ok], r_lo[ok])
+        dst[self._row_off + ids[ok]] = np.where(dirb[ok] == 1,
+                                                r_lo[ok], r_hi[ok])
+        # global: base = (lo*G + hi)*K + k, id = off + base*2 + (g1>g2)
+        ids = np.arange(self.n_global_links)
+        base, dirb = np.divmod(ids, 2)
+        k = base % K
+        hi = (base // K) % G
+        lo = base // (K * G)
+        ok = lo < hi
+        g_src = np.where(dirb == 1, hi, lo)
+        g_dst = np.where(dirb == 1, lo, hi)
+        sc, sb = self.gateway_router(g_src, g_dst, k)
+        dc, db = self.gateway_router(g_dst, g_src, k)
+        R, Bc = self.params.routers_per_group, B
+        src[self._glob_off + ids[ok]] = (g_src * C + sc)[ok] * Bc + sb[ok]
+        dst[self._glob_off + ids[ok]] = (g_dst * C + dc)[ok] * Bc + db[ok]
+        del R
+        # nic: node-side injection (src = -1 marks the node end)
+        nodes = np.arange(p.n_nodes)
+        dst[self._nic_off:] = self.router_of_node(nodes)
+        return src, dst
+
+    def expected_router_degree(self) -> np.ndarray:
+        """(B-1) chassis + (C-1) row + owned gateway slots, per router."""
+        p = self.params
+        G, K = p.n_groups, p.global_links_per_pair
+        deg = np.full(p.n_routers,
+                      (p.blades_per_chassis - 1) + (p.chassis_per_group - 1),
+                      dtype=np.int64)
+        for g_here in range(G):
+            for g_there in range(G):
+                if g_here == g_there:
+                    continue
+                ks = np.arange(K)
+                c, b = self.gateway_router(g_here, np.full(K, g_there), ks)
+                r = (g_here * p.chassis_per_group + c) \
+                    * p.blades_per_chassis + b
+                np.add.at(deg, r, 1)
+        return deg
 
     # ------------------------------------------------------------- addressing
     def node_coords(self, node: np.ndarray | int):
@@ -355,63 +671,90 @@ class Allocation:
         return self.nodes[rank]
 
 
-def make_allocation(topo: DragonflyTopology, n_ranks: int, *, spread: str,
+def make_allocation(topo: Topology, n_ranks: int, *, spread: str,
                     seed: int = 0, allocation_id: str | None = None
                     ) -> Allocation:
     """Build allocations matching the paper's placement tiers.
 
-    spread: 'inter_nodes' (same blade), 'inter_blades' (same chassis),
-            'inter_chassis' (same group, different chassis),
+    spread: 'inter_nodes' (same blade/router), 'inter_blades' (same
+            chassis; generic: same group, distinct routers),
+            'inter_chassis' (same group, different chassis; generic:
+            same group, strided routers),
             'inter_groups' (different groups),
             'scattered' (random over the machine — production-like),
             'contiguous' (fill blades in order).
+
+    Works on every topology in the family: the chassis/blade tiers use
+    the Aries coordinates when available and degrade to group/router
+    equivalents elsewhere (RNG draws for the generic tiers are identical
+    on Aries, so pre-family allocations replay bit-for-bit).
     """
-    p = topo.params
     rng = np.random.default_rng(seed)
+    aries = isinstance(topo, DragonflyTopology)
+    npg, npr = topo.nodes_per_group, topo.nodes_per_router
     if spread == "inter_nodes":
-        assert n_ranks <= p.nodes_per_blade
-        base = int(rng.integers(0, topo.params.n_routers)) * p.nodes_per_blade
+        assert n_ranks <= npr
+        base = int(rng.integers(0, topo.n_node_routers)) * npr
         nodes = [base + i for i in range(n_ranks)]
     elif spread == "inter_blades":
-        g = int(rng.integers(0, p.n_groups))
-        c = int(rng.integers(0, p.chassis_per_group))
-        blades = rng.choice(p.blades_per_chassis,
-                            size=min(n_ranks, p.blades_per_chassis),
-                            replace=False)
-        nodes = [topo.node_id(g, c, int(blades[i % len(blades)]),
-                              i // len(blades)) for i in range(n_ranks)]
+        p = topo.params if aries else None
+        g = int(rng.integers(0, topo.n_groups))
+        if aries:
+            c = int(rng.integers(0, p.chassis_per_group))
+            blades = rng.choice(p.blades_per_chassis,
+                                size=min(n_ranks, p.blades_per_chassis),
+                                replace=False)
+            nodes = [topo.node_id(g, c, int(blades[i % len(blades)]),
+                                  i // len(blades)) for i in range(n_ranks)]
+        else:
+            rpg = npg // npr            # node-routers per group
+            rs = rng.choice(rpg, size=min(n_ranks, rpg), replace=False)
+            nodes = [g * npg + int(rs[i % len(rs)]) * npr + i // len(rs)
+                     for i in range(n_ranks)]
     elif spread == "inter_chassis":
-        g = int(rng.integers(0, p.n_groups))
-        cs = rng.permutation(p.chassis_per_group)
-        nodes = [topo.node_id(g, int(cs[i % p.chassis_per_group]),
-                              (i // p.chassis_per_group) % p.blades_per_chassis,
-                              0) for i in range(n_ranks)]
+        p = topo.params if aries else None
+        g = int(rng.integers(0, topo.n_groups))
+        if aries:
+            cs = rng.permutation(p.chassis_per_group)
+            nodes = [topo.node_id(g, int(cs[i % p.chassis_per_group]),
+                                  (i // p.chassis_per_group)
+                                  % p.blades_per_chassis,
+                                  0) for i in range(n_ranks)]
+        else:
+            rpg = npg // npr
+            rs = rng.permutation(rpg)
+            nodes = [g * npg + int(rs[i % rpg]) * npr
+                     + (i // rpg) % npr for i in range(n_ranks)]
     elif spread == "inter_groups":
-        gs = rng.permutation(p.n_groups)
-        per_g = -(-n_ranks // p.n_groups)
+        gs = rng.permutation(topo.n_groups)
         nodes = []
         for i in range(n_ranks):
-            g = int(gs[i % p.n_groups])
-            j = i // p.n_groups
-            c, rem = divmod(j, p.blades_per_chassis)
-            nodes.append(topo.node_id(g, c % p.chassis_per_group,
-                                      rem, 0))
-        del per_g
+            g = int(gs[i % topo.n_groups])
+            j = i // topo.n_groups
+            if aries:
+                p = topo.params
+                c, rem = divmod(j, p.blades_per_chassis)
+                nodes.append(topo.node_id(g, c % p.chassis_per_group,
+                                          rem, 0))
+            else:
+                nodes.append(g * npg + (j * npr) % npg)
     elif spread.startswith("groups:"):
         # production-style: ranks packed into a random subset of k groups
         # (paper Fig. 8: 1024 nodes on 257 routers spanning 6 groups)
-        k = min(int(spread.split(":")[1]), p.n_groups)
-        gs = rng.choice(p.n_groups, size=k, replace=False)
-        nodes_per_group = p.routers_per_group * p.nodes_per_blade
+        k = min(int(spread.split(":")[1]), topo.n_groups)
+        # widen the subset when k groups cannot hold n_ranks (small
+        # non-Aries machines): capacity first, requested locality second
+        k = min(topo.n_groups, max(k, -(-n_ranks // npg)))
+        gs = rng.choice(topo.n_groups, size=k, replace=False)
         pool = np.stack([
-            g * nodes_per_group + rng.permutation(nodes_per_group)
+            g * npg + rng.permutation(npg)
             for g in gs])                       # [k, nodes_per_group]
         # interleave across the chosen groups (rank i -> group i mod k)
         nodes = list(pool.T.ravel()[:n_ranks])
     elif spread == "scattered":
-        nodes = list(rng.choice(p.n_nodes, size=n_ranks, replace=False))
+        nodes = list(rng.choice(topo.n_nodes, size=n_ranks, replace=False))
     elif spread == "contiguous":
-        start = int(rng.integers(0, max(1, p.n_nodes - n_ranks)))
+        start = int(rng.integers(0, max(1, topo.n_nodes - n_ranks)))
         nodes = list(range(start, start + n_ranks))
     else:
         raise ValueError(f"unknown spread {spread!r}")
@@ -419,3 +762,11 @@ def make_allocation(topo: DragonflyTopology, n_ranks: int, *, spread: str,
         allocation_id=allocation_id or f"{spread}-{seed}",
         nodes=tuple(int(x) for x in nodes),
     )
+
+
+register_topology(
+    "aries",
+    lambda **kw: DragonflyTopology(TopologyParams(**kw)),
+    small=dict(n_groups=4, chassis_per_group=2, blades_per_chassis=4,
+               nodes_per_blade=2, global_links_per_pair=2),
+)

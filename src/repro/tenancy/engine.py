@@ -25,7 +25,7 @@ from repro.core.strategies import RoutingMode
 from repro.dragonfly.routing import RoutingPolicy
 from repro.dragonfly.simulator import (DragonflySimulator, SimParams,
                                        TenantSegments)
-from repro.dragonfly.topology import DragonflyTopology
+from repro.dragonfly.topology import Topology, make_topology
 from repro.dragonfly.traffic import PATTERN_KIND, engine_for_arm
 from repro.policy import DecisionBatch, KIND_PT2PT
 from repro.tenancy.spec import TenancyMix, Workload
@@ -90,11 +90,14 @@ class InterferenceEngine:
     #: §5.1 counter-read overhead paid per phase by engine-driven arms
     counter_read_overhead_us: float = 0.35
 
-    def __init__(self, topo: DragonflyTopology,
+    def __init__(self, topo: Topology | str | None = None,
                  params: SimParams | None = None, *,
                  seed: int = 0, shared_engine: bool = False):
-        self.topo = topo
         self.params = params or SimParams()
+        # topo may be a Topology, a make_topology spec string, or None
+        # (resolve SimParams.topology); a mix's own `topology` overrides
+        self.topo = make_topology(topo if topo is not None
+                                  else self.params.topology)
         self.seed = seed
         self.shared_engine = shared_engine
         self._base_policy = RoutingPolicy(RoutingMode.ADAPTIVE_0)
@@ -115,8 +118,12 @@ class InterferenceEngine:
             engines[k] = by_name[w.arm] = eng
         return engines
 
+    def _topo_for(self, mix: TenancyMix) -> Topology:
+        """The machine a mix runs on: its own topology spec, else ours."""
+        return make_topology(mix.topology) if mix.topology else self.topo
+
     def _run(self, workloads: Sequence[Workload], allocs: Sequence,
-             rounds: int):
+             rounds: int, topo: Topology | None = None):
         """Core loop: returns ([TenantReport], mean tenant_link_loads).
 
         Builds a FRESH simulator (deterministic in SimParams.seed), so a
@@ -124,7 +131,8 @@ class InterferenceEngine:
         nodes — and is bit-identical, round for round, to driving
         run_phase(allocation=...) by hand (tests/test_tenancy.py).
         """
-        sim = DragonflySimulator(self.topo, self.params)
+        sim = DragonflySimulator(topo if topo is not None else self.topo,
+                                 self.params)
         p = self.params
         engines = self._engines_for(workloads, sim)
         phases = [w.phases() for w in workloads]
@@ -210,16 +218,19 @@ class InterferenceEngine:
     def run_alone(self, mix: TenancyMix, k: int, *, rounds: int = 4,
                   allocs: Sequence | None = None) -> TenantReport:
         """Tenant k's run-alone baseline: same allocation, empty machine."""
+        topo = self._topo_for(mix)
         allocs = allocs if allocs is not None \
-            else mix.materialize(self.topo, seed=self.seed)
-        reports, _ = self._run((mix.workloads[k],), [allocs[k]], rounds)
+            else mix.materialize(topo, seed=self.seed)
+        reports, _ = self._run((mix.workloads[k],), [allocs[k]], rounds,
+                               topo=topo)
         return reports[0]
 
     def run_mix(self, mix: TenancyMix, *, rounds: int = 4,
                 baselines: bool = True) -> MixResult:
         """Run the whole mix; with baselines, score per-tenant slowdown."""
-        allocs = mix.materialize(self.topo, seed=self.seed)
-        reports, loads = self._run(mix.workloads, allocs, rounds)
+        topo = self._topo_for(mix)
+        allocs = mix.materialize(topo, seed=self.seed)
+        reports, loads = self._run(mix.workloads, allocs, rounds, topo=topo)
         if baselines:
             for k in range(len(mix)):
                 alone = self.run_alone(mix, k, rounds=rounds, allocs=allocs)

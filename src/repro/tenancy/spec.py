@@ -17,8 +17,7 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from repro.core.strategies import RoutingMode
-from repro.dragonfly.topology import (Allocation, DragonflyTopology,
-                                      make_allocation)
+from repro.dragonfly.topology import Allocation, Topology, make_allocation
 from repro.dragonfly.traffic import PATTERNS
 
 
@@ -68,6 +67,9 @@ class TenancyMix:
     name: str
     workloads: tuple
     victim: int = 0
+    #: optional topology spec for this mix (make_topology string); None
+    #: means the engine/sweep caller's machine.  docs/topology.md.
+    topology: str | None = None
 
     def __post_init__(self):
         if not self.workloads:
@@ -97,7 +99,7 @@ class TenancyMix:
         ws[self.victim] = ws[self.victim].with_spread(spread)
         return dataclasses.replace(self, workloads=tuple(ws))
 
-    def materialize(self, topo: DragonflyTopology, *,
+    def materialize(self, topo: Topology, *,
                     seed: int = 0, max_tries: int = 64) -> list:
         """Draw node-DISJOINT allocations, one per workload.
 
@@ -112,7 +114,7 @@ class TenancyMix:
             if w.spread == "scattered":
                 # dense mixes: draw straight from the unused-node pool
                 # (independent redraws would collide almost surely)
-                pool = np.asarray(sorted(set(range(topo.params.n_nodes))
+                pool = np.asarray(sorted(set(range(topo.n_nodes))
                                          - used), dtype=np.int64)
                 if pool.size < w.n_ranks:
                     raise RuntimeError(

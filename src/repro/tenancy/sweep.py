@@ -15,12 +15,12 @@ from __future__ import annotations
 from typing import Mapping, Sequence
 
 from repro.dragonfly.simulator import SimParams
-from repro.dragonfly.topology import DragonflyTopology
+from repro.dragonfly.topology import Topology
 from repro.tenancy.engine import InterferenceEngine, arm_label
 from repro.tenancy.spec import TenancyMix
 
 
-def sweep(topo: DragonflyTopology, mixes: Sequence[TenancyMix],
+def sweep(topo: Topology | str | None, mixes: Sequence[TenancyMix],
           arms: Mapping, *, params: SimParams | None = None,
           rounds: int = 4, seed: int = 0,
           placements: Sequence = (None,),
@@ -44,6 +44,7 @@ def sweep(topo: DragonflyTopology, mixes: Sequence[TenancyMix],
                 vic = res.victim_report
                 records.append({
                     "mix": mix.name,
+                    "topology": eng._topo_for(cell).spec_str(),
                     "policy": label,
                     "arm": arm_label(arm),
                     "placement": place or mix.victim_workload.spread,

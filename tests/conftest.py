@@ -1,21 +1,178 @@
+"""Shared test config: src-layout path + the hypothesis fallback shim.
+
+When the real `hypothesis` is installed the suite runs at full
+property-testing power (profile "ci", 25 examples).  In containers
+without it, a deterministic stand-in module is built here and installed
+into ``sys.modules`` so ``from hypothesis import given, strategies``
+keeps importing — but every stub-driven test is marked
+``hypothesis_stub`` and the report header says so, making the
+degradation visible instead of silent (ISSUE 7 satellite: the old
+``tests/_hypothesis_stub.py`` hid it).
+"""
+
+import inspect
 import os
+import random
 import sys
+import types
+
+import pytest
 
 # NOTE: no XLA_FLAGS here by design — smoke tests and benches must see ONE
 # device; only launch/dryrun.py (its own process) requests 512.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 try:
-    from hypothesis import settings
-except ModuleNotFoundError:
-    # Container without hypothesis: install the deterministic stub so the
-    # suite (incl. property tests, at reduced power) still runs.
-    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
-    import _hypothesis_stub
+    import hypothesis  # noqa: F401
 
-    sys.modules["hypothesis"] = _hypothesis_stub
-    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
-    from hypothesis import settings
+    HYPOTHESIS_FALLBACK = False
+except ModuleNotFoundError:
+    HYPOTHESIS_FALLBACK = True
+
+
+def _build_stub() -> types.ModuleType:
+    """A minimal deterministic `hypothesis` stand-in.
+
+    Supports the subset the suite uses: ``@given`` with positional or
+    keyword strategies, ``st.integers/floats/booleans/sampled_from/
+    lists``, and ``settings`` profiles.  ``@given`` runs a boundary pass
+    (min/max/representative values) plus a seeded random pass — far
+    weaker than real shrinking, hence the visible marker.
+    """
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+
+    class settings:  # noqa: N801 — mirrors hypothesis' API
+        _profiles: dict = {}
+        max_examples = 25
+
+        def __init__(self, **kw):
+            self.kw = kw
+
+        def __call__(self, fn):
+            return fn
+
+        @classmethod
+        def register_profile(cls, name, **kw):
+            cls._profiles[name] = kw
+
+        @classmethod
+        def load_profile(cls, name):
+            for k, v in cls._profiles.get(name, {}).items():
+                setattr(cls, k, v)
+
+    class SearchStrategy:
+        """Deterministic value source: boundary examples + random draws."""
+
+        def __init__(self, boundary, draw):
+            self.boundary = boundary  # list of edge-case values
+            self.draw = draw          # rnd -> one random value
+
+    def integers(min_value=0, max_value=2**31 - 1):
+        lo, hi = int(min_value), int(max_value)
+        mid = (lo + hi) // 2
+        return SearchStrategy([lo, hi, mid],
+                              lambda r: r.randint(lo, hi))
+
+    def floats(min_value=0.0, max_value=1.0, **_):
+        lo, hi = float(min_value), float(max_value)
+        return SearchStrategy([lo, hi, (lo + hi) / 2],
+                              lambda r: r.uniform(lo, hi))
+
+    def booleans():
+        return SearchStrategy([False, True],
+                              lambda r: bool(r.getrandbits(1)))
+
+    def sampled_from(elements):
+        seq = list(elements)
+        return SearchStrategy([seq[0], seq[-1]],
+                              lambda r: r.choice(seq))
+
+    def lists(elem, min_size=0, max_size=8):
+        def draw(r):
+            n = r.randint(min_size, max_size)
+            return [elem.draw(r) for _ in range(n)]
+
+        return SearchStrategy([[elem.boundary[0]] * max(min_size, 1)
+                               if max_size else []], draw)
+
+    def given(*arg_strategies, **kw_strategies):
+        """Bind positional strategies to the RIGHTMOST free parameters.
+
+        Leading unbound parameters stay in the wrapper's signature so
+        ``@given`` composes with ``@pytest.mark.parametrize`` fixtures
+        exactly like the real decorator.
+        """
+
+        def deco(fn):
+            sig = inspect.signature(fn)
+            free = [p for p in sig.parameters if p not in kw_strategies]
+            pos_names = free[len(free) - len(arg_strategies):]
+            strat_map = dict(zip(pos_names, arg_strategies),
+                             **kw_strategies)
+            leading = [sig.parameters[p] for p in sig.parameters
+                       if p not in strat_map]
+
+            def wrapper(*args, **kwargs):
+                rnd = random.Random(0xD5A607)
+                names = list(strat_map)
+                # boundary pass: walk each strategy's edge list in step
+                width = max(len(s.boundary) for s in strat_map.values())
+                for i in range(width):
+                    ex = {n: s.boundary[i % len(s.boundary)]
+                          for n, s in strat_map.items()}
+                    fn(*args, **kwargs, **ex)
+                # random pass up to the profile budget
+                for _ in range(max(settings.max_examples - width, 0)):
+                    ex = {n: s.draw(rnd) for n, s in strat_map.items()}
+                    fn(*args, **kwargs, **ex)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper.__signature__ = sig.replace(parameters=leading)
+            wrapper.hypothesis_stub = True
+            wrapper.pytestmark = list(getattr(fn, "pytestmark", []))
+            return wrapper
+
+        return deco
+
+    st.SearchStrategy = SearchStrategy
+    st.integers = integers
+    st.floats = floats
+    st.booleans = booleans
+    st.sampled_from = sampled_from
+    st.lists = lists
+    mod.strategies = st
+    mod.settings = settings
+    mod.given = given
+    mod.SearchStrategy = SearchStrategy
+    return mod
+
+
+if HYPOTHESIS_FALLBACK:
+    _stub = _build_stub()
+    sys.modules["hypothesis"] = _stub
+    sys.modules["hypothesis.strategies"] = _stub.strategies
+
+from hypothesis import settings  # noqa: E402
 
 settings.register_profile("ci", max_examples=25, deadline=None)
 settings.load_profile("ci")
+
+
+def pytest_report_header(config):
+    if HYPOTHESIS_FALLBACK:
+        return ("hypothesis: NOT INSTALLED — deterministic stub active "
+                "(property tests run at reduced power; items marked "
+                "'hypothesis_stub')")
+    return "hypothesis: real package active (profile 'ci')"
+
+
+def pytest_collection_modifyitems(config, items):
+    if not HYPOTHESIS_FALLBACK:
+        return
+    for item in items:
+        fn = getattr(item, "function", None)
+        if getattr(fn, "hypothesis_stub", False):
+            item.add_marker(pytest.mark.hypothesis_stub)

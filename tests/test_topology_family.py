@@ -1,0 +1,317 @@
+"""Topology-family harness (ISSUE 7): cross-topology structural
+invariants (property-tested), the Aries seed-regression pins, and the
+fast-path/oracle differential across families.
+
+Three layers:
+  * every topology in the registry satisfies the structural contract
+    (repro.dragonfly.invariants) for arbitrary candidate-draw seeds;
+  * the canonical Aries machine is frozen — link layout, capacities,
+    candidate paths, allocations and a seed-for-seed run_phase trace are
+    pinned by digest, so a family refactor cannot silently move it;
+  * run_phase stays equivalent to the pre-refactor oracle and
+    self-consistent (plans, subsampling) on the NON-Aries families too.
+"""
+
+import hashlib
+
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.core.strategies import RoutingMode
+from repro.dragonfly import (DragonflySimulator, DragonflyTopology,
+                             SimParams, TopologyParams, make_topology,
+                             registered_topologies, small_topology)
+from repro.dragonfly import invariants as inv
+from repro.dragonfly.reference import reference_run_phase
+from repro.dragonfly.routing import RoutingPolicy
+from repro.dragonfly.topology import PAD, Topology, make_allocation
+
+MAX_HOPS = Topology.MAX_HOPS
+
+ALL_NAMES = registered_topologies()
+#: one small instance per family, shared across the module (construction
+#: is cheap but capacity arrays are worth reusing)
+SMALL = {name: small_topology(name) for name in ALL_NAMES}
+
+
+def _digest(a) -> str:
+    return hashlib.sha256(np.ascontiguousarray(a).tobytes()) \
+        .hexdigest()[:16]
+
+
+# --------------------------------------------------------------------------
+# Registry contract.
+# --------------------------------------------------------------------------
+def test_registry_covers_the_family():
+    assert {"aries", "dragonfly", "dragonfly_consecutive",
+            "dragonfly_plus", "fattree"} <= set(ALL_NAMES)
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_spec_str_roundtrips_through_make_topology(name):
+    topo = SMALL[name]
+    clone = make_topology(topo.spec_str())
+    assert clone.describe() == topo.describe()
+    assert np.array_equal(clone.capacity_gbs, topo.capacity_gbs)
+
+
+def test_make_topology_rejects_unknown_family():
+    with pytest.raises(ValueError, match="unknown topology"):
+        make_topology("torus:k=4")
+
+
+def test_make_topology_passes_instances_through():
+    topo = SMALL["aries"]
+    assert make_topology(topo) is topo
+
+
+# --------------------------------------------------------------------------
+# Structural invariants, property-tested over every registered topology.
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_link_ranges_partition(name):
+    inv.check_link_ranges(SMALL[name])
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_router_radix_matches_spec(name):
+    inv.check_router_radix(SMALL[name])
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+@given(seed=st.integers(min_value=0, max_value=2**16 - 1))
+def test_candidates_invariants_any_draw(name, seed):
+    """Paths from candidates() are structurally valid for ARBITRARY
+    pair samples and candidate-draw seeds: in-range physical links,
+    contiguous router walks src->dst, hop bounds respected, Valiant
+    legs transiting exactly one intermediate group."""
+    topo = SMALL[name]
+    src, dst = inv.sample_pairs(topo, n=48, seed=seed)
+    inv.check_candidates(topo, src, dst,
+                         rng=np.random.default_rng(seed + 1))
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+@given(n_min=st.integers(min_value=1, max_value=4),
+       n_nonmin=st.integers(min_value=0, max_value=3))
+def test_candidates_shape_contract(name, n_min, n_nonmin):
+    topo = SMALL[name]
+    src, dst = inv.sample_pairs(topo, n=16, seed=3)
+    links, is_nonmin = topo.candidates(src, dst, n_min=n_min,
+                                       n_nonmin=n_nonmin)
+    assert links.shape == (16, n_min + n_nonmin, MAX_HOPS)
+    assert is_nonmin.tolist() == [False] * n_min + [True] * n_nonmin
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_candidates_default_rng_is_deterministic(name):
+    """candidates(rng=None) is the front-door contract: a fresh
+    deterministic generator, so two calls agree bit-for-bit."""
+    topo = SMALL[name]
+    src, dst = inv.sample_pairs(topo, n=32, seed=9)
+    la, _ = topo.candidates(src, dst)
+    lb, _ = topo.candidates(src, dst)
+    assert np.array_equal(la, lb)
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_same_node_flows_have_no_hops(name):
+    topo = SMALL[name]
+    src = np.arange(min(8, topo.n_nodes), dtype=np.int64)
+    links, _ = topo.candidates(src, src.copy())
+    assert (links == PAD).all()
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_full_invariant_battery(name):
+    """The same battery `scripts/ci_lint.py --topology` runs headlessly."""
+    inv.check_all(SMALL[name], n_pairs=128)
+
+
+def test_invariant_violation_is_detected():
+    """The harness itself must be able to fail: a topology lying about
+    its link count is caught, not silently accepted."""
+    class Liar(DragonflyTopology):
+        def link_ranges(self):
+            r = dict(super().link_ranges())
+            lo, hi = r["global"]
+            r["global"] = (lo, hi - 1)      # leaves a one-link gap
+            return r
+
+    with pytest.raises(inv.InvariantViolation):
+        inv.check_link_ranges(Liar(SMALL_ARIES_PARAMS))
+
+
+# --------------------------------------------------------------------------
+# Aries seed regression: the canonical machine is frozen by digest.
+# Pinned on the pre-family code (PR-4 HEAD); a family refactor that
+# moves ANY of these has broken bit-compatibility.
+# --------------------------------------------------------------------------
+SMALL_ARIES_PARAMS = TopologyParams(n_groups=4, chassis_per_group=2,
+                                    blades_per_chassis=4)
+
+
+def test_aries_default_layout_pinned():
+    t = DragonflyTopology()
+    assert {k: tuple(map(int, v)) for k, v in t.link_ranges().items()} \
+        == {"chassis": (0, 36864), "row": (36864, 50688),
+            "global": (50688, 51840), "nic": (51840, 56448)}
+    assert t.n_links == 56448
+    assert _digest(t.capacity_gbs) == "a0f5f5cb52070c17"
+
+
+def test_aries_small_layout_pinned():
+    t = DragonflyTopology(SMALL_ARIES_PARAMS)
+    assert {k: tuple(map(int, v)) for k, v in t.link_ranges().items()} \
+        == {"chassis": (0, 256), "row": (256, 384),
+            "global": (384, 512), "nic": (512, 640)}
+    assert _digest(t.capacity_gbs) == "da24b3b4878ed09b"
+
+
+def _small_aries_pairs(n=200):
+    t = DragonflyTopology(SMALL_ARIES_PARAMS)
+    rng = np.random.default_rng(123)
+    src = rng.integers(0, t.params.n_nodes, size=n)
+    dst = (src + rng.integers(1, t.params.n_nodes, size=n)) \
+        % t.params.n_nodes
+    return t, src, dst
+
+
+def test_aries_candidate_paths_pinned():
+    t, src, dst = _small_aries_pairs()
+    links, is_nonmin = t.candidate_paths(src, dst,
+                                         np.random.default_rng(7),
+                                         n_min=4, n_nonmin=2)
+    assert links.shape == (200, 6, MAX_HOPS)
+    assert is_nonmin.tolist() == [False] * 4 + [True] * 2
+    assert _digest(links.astype(np.int64)) == "83e48d69d7778b5d"
+
+
+def test_aries_scalar_enumerators_pinned():
+    t, src, dst = _small_aries_pairs()
+    acc = []
+    for s, d in zip(src[:64], dst[:64]):
+        acc += t.minimal_path(int(s), int(d), k=1, order_seed=2) + [-7]
+        acc += t.nonminimal_path(int(s), int(d), gi=3, k1=1, k2=2) + [-9]
+    assert _digest(np.asarray(acc, dtype=np.int64)) == "9f7f9565865ab23f"
+
+
+def test_aries_allocation_pinned():
+    t = DragonflyTopology(SMALL_ARIES_PARAMS)
+    al = make_allocation(t, 8, spread="inter_groups", seed=3)
+    assert al.nodes[:4] == (96, 64, 32, 0)
+    assert _digest(np.asarray(al.nodes, dtype=np.int64)) \
+        == "c78be5273afe2a92"
+
+
+def test_aries_run_phase_trace_pinned():
+    """Seed-for-seed simulator trace on the small Aries: two phases of
+    600 flows over an 8-rank inter-group allocation, hashed with the
+    post-phase queue/memory/clock state."""
+    t = DragonflyTopology(SMALL_ARIES_PARAMS)
+    sim = DragonflySimulator(t, SimParams(seed=0))
+    al = make_allocation(t, 8, spread="inter_groups", seed=3)
+    fr = np.random.default_rng(42)
+    fs = fr.integers(0, 8, 600)
+    fd = (fs + fr.integers(1, 8, 600)) % 8
+    fb = fr.pareto(1.2, 600) * 65536 + 1024
+    nodes = np.array(al.nodes)
+    pol = RoutingPolicy(RoutingMode.ADAPTIVE_0)
+    h = hashlib.sha256()
+    for _ in range(2):
+        r = sim.run_phase(nodes[fs], nodes[fd], fb, pol)
+        for a in (r.t_us, r.latency_us, r.stalls_per_flit):
+            h.update(np.ascontiguousarray(a).tobytes())
+    h.update(np.ascontiguousarray(sim.link_queue_s).tobytes())
+    h.update(np.ascontiguousarray(sim.est_memory_s).tobytes())
+    h.update(np.float64(sim.clock_s).tobytes())
+    assert h.hexdigest()[:16] == "3534ff5a6f7e4fe1"
+
+
+# --------------------------------------------------------------------------
+# Differential: the vectorized fast path vs the frozen oracle, on every
+# family the oracle can drive (it is topology-agnostic by construction).
+# --------------------------------------------------------------------------
+DIFF_NAMES = ["aries", "dragonfly", "dragonfly_plus"]
+
+
+def _family_flows(topo, seed=42, n=400):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, topo.n_nodes, size=n)
+    dst = (src + rng.integers(1, topo.n_nodes, size=n)) % topo.n_nodes
+    size = rng.pareto(1.2, size=n) * 65536 + 1024
+    return src, dst, size
+
+
+@pytest.mark.parametrize("name", DIFF_NAMES)
+def test_fast_path_bit_identical_to_oracle(name):
+    topo = SMALL[name]
+    src, dst, size = _family_flows(topo)
+    al = make_allocation(topo, 8, spread="inter_groups", seed=3)
+    sp = SimParams(seed=0)
+    ref_sim = DragonflySimulator(topo, sp)
+    fast_sim = DragonflySimulator(topo, sp)
+    pol = RoutingPolicy(RoutingMode.ADAPTIVE_0)
+    for _ in range(2):
+        ra = reference_run_phase(ref_sim, src, dst, size, pol, al)
+        rb = fast_sim.run_phase(src, dst, size, pol, al)
+        assert np.array_equal(ra.t_us, rb.t_us)
+        assert np.array_equal(ra.latency_us, rb.latency_us)
+        assert np.array_equal(ra.stalls_per_flit, rb.stalls_per_flit)
+        assert ra.nonmin_fraction == rb.nonmin_fraction
+        assert np.array_equal(ref_sim.link_queue_s, fast_sim.link_queue_s)
+    assert ref_sim.clock_s == fast_sim.clock_s
+
+
+@pytest.mark.parametrize("name", ["dragonfly", "dragonfly_consecutive",
+                                  "dragonfly_plus", "fattree"])
+def test_non_aries_seed_determinism(name):
+    """Same seed, same flows -> bit-identical runs on every new family."""
+    topo = SMALL[name]
+    src, dst, size = _family_flows(topo, seed=5)
+    pol = RoutingPolicy(RoutingMode.ADAPTIVE_0)
+    results = []
+    for _ in range(2):
+        sim = DragonflySimulator(topo, SimParams(seed=11))
+        results.append(sim.run_phase(src, dst, size, pol))
+    assert np.array_equal(results[0].t_us, results[1].t_us)
+    assert np.array_equal(results[0].latency_us, results[1].latency_us)
+
+
+@pytest.mark.parametrize("name", ["dragonfly", "dragonfly_plus"])
+def test_non_aries_plan_vs_planless_consistency(name):
+    """A PhasePlan run is a different RNG trajectory but the same
+    physics on the new families too."""
+    topo = SMALL[name]
+    src, dst, size = _family_flows(topo, seed=8)
+    al = make_allocation(topo, 8, spread="inter_groups", seed=4)
+    pol = RoutingPolicy(RoutingMode.ADAPTIVE_0)
+    sim_a = DragonflySimulator(topo, SimParams(seed=5))
+    sim_b = DragonflySimulator(topo, SimParams(seed=5))
+    ra = sim_a.run_phase(src, dst, size, pol, al)
+    rb = sim_b.run_phase(None, None, None, pol, al,
+                         plan=sim_b.plan_for(src, dst, size))
+    assert rb.t_us.shape == ra.t_us.shape
+    assert np.median(rb.t_us) == pytest.approx(np.median(ra.t_us),
+                                               rel=0.25)
+
+
+@pytest.mark.parametrize("name", ["dragonfly", "dragonfly_plus"])
+def test_non_aries_subsample_consistency(name):
+    """max_flows subsampling keeps shapes on the new families and the
+    subsampled phase still produces finite positive flow times (the
+    kept flows carry the dropped flows' bytes, so per-flow medians
+    shift by design — only the structure is asserted)."""
+    topo = SMALL[name]
+    src, dst, size = _family_flows(topo, seed=2, n=300)
+    pol = RoutingPolicy(RoutingMode.ADAPTIVE_0)
+    full = DragonflySimulator(topo, SimParams(seed=1)) \
+        .run_phase(src, dst, size, pol)
+    sub = DragonflySimulator(topo, SimParams(seed=1, max_flows=100)) \
+        .run_phase(src, dst, size, pol)
+    assert full.t_us.shape == (300,)
+    assert sub.t_us.shape == (100,)
+    for r in (full, sub):
+        assert np.isfinite(r.t_us).all() and (r.t_us > 0).all()
