@@ -3,7 +3,8 @@
 
 PY ?= python
 
-.PHONY: test bench-smoke bench-perf bench-interference lint docs
+.PHONY: test bench-smoke bench-perf bench-interference bench-faults \
+	lint docs
 
 # tier-1 verify (ROADMAP): same flags as CI
 test:
@@ -15,6 +16,8 @@ bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only fig7,fig8,tpu --policy app_aware
 	PYTHONPATH=src $(PY) -m benchmarks.interference_matrix --smoke \
 		--out BENCH_interference.json
+	PYTHONPATH=src $(PY) -m benchmarks.fault_matrix --smoke \
+		--out BENCH_faults.json
 
 # simulator phase-kernel perf trajectory: write + schema-check BENCH_sim.json
 bench-perf:
@@ -26,6 +29,13 @@ bench-perf:
 bench-interference:
 	PYTHONPATH=src $(PY) -m benchmarks.interference_matrix \
 		--out BENCH_interference.json
+	$(PY) scripts/ci_lint.py --bench
+
+# fault-injection matrix: write + schema-check BENCH_faults.json
+# (docs/faults.md)
+bench-faults:
+	PYTHONPATH=src $(PY) -m benchmarks.fault_matrix \
+		--out BENCH_faults.json
 	$(PY) scripts/ci_lint.py --bench
 
 lint:

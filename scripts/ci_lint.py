@@ -3,14 +3,16 @@
 Default mode: line length + trailing whitespace over the Python tree.
 ``--docs`` mode (the Makefile `docs` target): README/docs internal-link
 integrity + no stray __pycache__/*.pyc tracked in git.
-``--bench`` mode (the Makefile `bench-perf` / `bench-interference`
-targets): BENCH_sim.json exists and parses against its schema
-(docs/performance.md), and BENCH_interference.json — when present —
+``--bench`` mode (the Makefile `bench-perf` / `bench-interference` /
+`bench-faults` targets): BENCH_sim.json exists and parses against its
+schema (docs/performance.md); BENCH_interference.json — when present —
 matches bench_interference/v1 or /v2 (docs/interference.md; v2 records
-the topology per cell).
+the topology per cell); BENCH_faults.json — when present — matches
+bench_faults/v1 (docs/faults.md).
 ``--topology`` mode (`make lint` / bench-smoke): instantiates every
 registered topology at small scale and runs the structural invariant
-battery headlessly (docs/topology.md) — needs numpy + src on the path.
+battery headlessly (docs/topology.md), including the fault-mask checks
+under a seeded fault state (docs/faults.md) — needs numpy + src.
 """
 
 import argparse
@@ -193,15 +195,78 @@ def lint_bench_interference_schema(require: bool = False) -> list:
     return bad
 
 
+#: BENCH_faults.json contract (benchmarks/fault_matrix.py): top-level
+#: fields -> type, and per-cell numeric fields (docs/faults.md)
+_BENCH_FAULTS_SCHEMA_TOP = {"schema": str, "rounds": int, "seed": int,
+                            "topologies": list, "scenarios": dict,
+                            "policies": list, "matrix": dict,
+                            "checks": dict}
+_BENCH_FAULTS_CELL_FIELDS = ("victim_slowdown", "victim_time_us",
+                             "victim_alone_us", "victim_recovery_rounds",
+                             "victim_recovery_time_us", "stranded_flows")
+
+
+def lint_bench_faults_schema(require: bool = False) -> list:
+    """BENCH_faults.json parses and matches bench_faults/v1."""
+    path = ROOT / "BENCH_faults.json"
+    if not path.exists():
+        return ["BENCH_faults.json: missing (run `make bench-faults`)"] \
+            if require else []
+    try:
+        doc = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        return [f"BENCH_faults.json: unparseable ({e})"]
+    bad = []
+    for key, typ in _BENCH_FAULTS_SCHEMA_TOP.items():
+        if key not in doc:
+            bad.append(f"BENCH_faults.json: missing key {key!r}")
+        elif not isinstance(doc[key], typ):
+            bad.append(f"BENCH_faults.json: {key!r} should be "
+                       f"{typ.__name__}")
+    if doc.get("schema") not in (None, "bench_faults/v1"):
+        bad.append(f"BENCH_faults.json: unknown schema "
+                   f"{doc.get('schema')!r}")
+    for cellkey, row in (doc.get("matrix") or {}).items():
+        for policy in (doc.get("policies") or list(row)):
+            cell = row.get(policy)
+            if not isinstance(cell, dict):
+                bad.append(f"BENCH_faults.json: matrix.{cellkey} missing "
+                           f"policy {policy!r}")
+                continue
+            for f in _BENCH_FAULTS_CELL_FIELDS:
+                if not isinstance(cell.get(f), (int, float)):
+                    bad.append(f"BENCH_faults.json: matrix.{cellkey}."
+                               f"{policy}.{f} missing or non-numeric")
+            if not isinstance(cell.get("topology"), str):
+                bad.append(f"BENCH_faults.json: matrix.{cellkey}."
+                           f"{policy}.topology missing or not a string")
+            if not isinstance(cell.get("scenario"), str):
+                bad.append(f"BENCH_faults.json: matrix.{cellkey}."
+                           f"{policy}.scenario missing or not a string")
+            if not isinstance(cell.get("tenant_recovery", {}), dict):
+                bad.append(f"BENCH_faults.json: matrix.{cellkey}."
+                           f"{policy}.tenant_recovery should be a dict")
+    return bad
+
+
 def lint_topology_invariants() -> list:
     """Every registered topology passes the invariant battery at its
-    small scale (repro.dragonfly.invariants.check_all)."""
+    small scale (repro.dragonfly.invariants.check_all), plus the
+    fault-mask battery under a deterministic seeded fault state
+    (docs/faults.md)."""
     sys.path.insert(0, str(ROOT / "src"))
     try:
+        import numpy as np
+
         from repro.dragonfly.invariants import (InvariantViolation,
-                                                check_all)
+                                                check_all,
+                                                check_capacity_scale,
+                                                check_fault_mask,
+                                                sample_pairs)
         from repro.dragonfly.topology import (registered_topologies,
                                               small_topology)
+        from repro.faults import (FaultSchedule, link_degrade, link_down,
+                                  router_down)
     except ImportError as e:
         return [f"--topology: cannot import repro.dragonfly ({e})"]
     bad = []
@@ -209,6 +274,19 @@ def lint_topology_invariants() -> list:
         try:
             topo = small_topology(name)
             check_all(topo, n_pairs=128)
+            # deterministic fault state: 2 random global links down, one
+            # more degraded, router 0 down — then the mask battery
+            sched = FaultSchedule.of(
+                link_down(n_random=2, seed=11),
+                link_degrade(0.25, n_random=1, seed=12),
+                router_down([0])).bind(topo)
+            state = sched.state_at(0)
+            check_capacity_scale(topo, state)
+            src, dst = sample_pairs(topo, n=64, seed=2)
+            check_fault_mask(topo, state.dead, src, dst,
+                             rng=np.random.default_rng(8))
+            check_fault_mask(topo, np.zeros(topo.n_links, dtype=bool),
+                             src, dst, rng=np.random.default_rng(8))
         except InvariantViolation as e:
             bad.append(f"topology {name!r}: {e}")
         except Exception as e:  # construction/battery crash
@@ -235,11 +313,13 @@ def main(argv=None) -> int:
         bad = lint_topology_invariants()
     elif args.bench:
         bad = (lint_bench_schema(require=True)
-               + lint_bench_interference_schema())
+               + lint_bench_interference_schema()
+               + lint_bench_faults_schema())
     elif args.docs:
         bad = (lint_docs_links() + lint_tracked_pycache()
                + lint_bare_jax_calls() + lint_bench_schema()
-               + lint_bench_interference_schema())
+               + lint_bench_interference_schema()
+               + lint_bench_faults_schema())
     else:
         bad = lint_style()
     print("\n".join(bad))

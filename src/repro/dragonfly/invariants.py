@@ -18,6 +18,8 @@ __all__ = [
     "InvariantViolation",
     "check_all",
     "check_candidates",
+    "check_capacity_scale",
+    "check_fault_mask",
     "check_link_ranges",
     "check_router_radix",
     "sample_pairs",
@@ -153,6 +155,86 @@ def check_candidates(topo: Topology, src, dst, *, rng=None,
                     _fail(topo, f"Valiant path for ({src[i]},{dst[i]}) "
                                 f"cand {c} transits groups {sorted(mid)} "
                                 f"(want exactly one)")
+
+
+def check_capacity_scale(topo: Topology, state) -> None:
+    """A FaultState's capacity_scale is a well-formed per-link scale:
+    float64 [n_links], finite, in [0, 1], with ``dead`` exactly the
+    (near-)zero entries."""
+    scale = np.asarray(state.capacity_scale)
+    if scale.shape != (topo.n_links,):
+        _fail(topo, f"capacity_scale shape {scale.shape} != "
+                    f"({topo.n_links},)")
+    if scale.dtype != np.float64:
+        _fail(topo, f"capacity_scale dtype {scale.dtype} != float64")
+    if not np.isfinite(scale).all():
+        _fail(topo, "capacity_scale has non-finite entries")
+    if scale.min(initial=1.0) < 0.0 or scale.max(initial=0.0) > 1.0:
+        _fail(topo, "capacity_scale outside [0, 1]")
+    dead = np.asarray(state.dead)
+    if dead.shape != scale.shape or dead.dtype != bool:
+        _fail(topo, "dead mask shape/dtype mismatch with capacity_scale")
+    if not np.array_equal(dead, scale <= 1e-9):
+        _fail(topo, "dead mask disagrees with capacity_scale zeros")
+
+
+def check_fault_mask(topo: Topology, dead, src, dst, *, rng=None,
+                     n_min: int = 2, n_nonmin: int = 2) -> None:
+    """Fault-mask semantics over the PAD-padded candidate tensors
+    (docs/faults.md): the vectorized mask the simulator derives from a
+    dead-link flag array must agree with a per-path scalar recheck —
+
+      * a candidate survives iff NO link on its path is dead (PAD
+        entries never count: the mask gather must not be poisoned by
+        the `safe` placeholder link 0, even when link 0 itself dies);
+      * masking never rewrites the candidate tensor: the PAD layout is
+        untouched (the mask lives beside the tensor, never inside it),
+        so surviving candidates keep their exact PAD-masked paths;
+      * reachability accounting: a flow is stranded iff every candidate
+        crosses a dead link (endpoint-NIC deaths are checked by the
+        simulator on top of this).
+    """
+    dead = np.asarray(dead, dtype=bool)
+    if dead.shape != (topo.n_links,):
+        _fail(topo, f"dead mask shape {dead.shape} != ({topo.n_links},)")
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    links, is_nonmin = topo.candidates(src, dst, rng, n_min=n_min,
+                                       n_nonmin=n_nonmin)
+    frozen = links.copy()
+    valid = links != PAD
+    safe = np.where(valid, links, 0)
+    cand_alive = ~((dead[safe] & valid).any(axis=-1))
+    stranded = ~cand_alive.any(axis=-1)
+    if not np.array_equal(links, frozen):
+        _fail(topo, "mask computation mutated the candidate tensor")
+    # PAD-placeholder immunity: PAD slots gather link 0 through `safe`;
+    # killing link 0 must only ever change candidates whose PATH truly
+    # contains link 0 — never a candidate that merely has PAD slots
+    dead0 = dead.copy()
+    dead0[0] = True
+    alive0 = ~((dead0[safe] & valid).any(axis=-1))
+    contains0 = ((links == 0) & valid).any(axis=-1)
+    if ((alive0 != cand_alive) & ~contains0).any():
+        _fail(topo, "PAD placeholder poisons the fault mask when link 0 "
+                    "is dead")
+    # scalar recheck, flow by flow
+    for i in range(src.shape[0]):
+        for c in range(links.shape[1]):
+            path = links[i, c][valid[i, c]]
+            want = not dead[path].any() if path.size else True
+            if bool(cand_alive[i, c]) != want:
+                _fail(topo, f"fault mask disagrees with scalar recheck "
+                            f"for pair ({src[i]},{dst[i]}) cand {c}")
+        if bool(stranded[i]) != (not any(
+                not dead[links[i, c][valid[i, c]]].any()
+                if valid[i, c].any() else True
+                for c in range(links.shape[1]))):
+            _fail(topo, f"stranded accounting wrong for pair "
+                        f"({src[i]},{dst[i]})")
+    # the mask must never kill a candidate on a healthy machine
+    if not dead.any() and not cand_alive.all():
+        _fail(topo, "mask kills candidates with no dead links")
 
 
 def check_all(topo: Topology, *, n_pairs: int = 256, seed: int = 1) -> None:

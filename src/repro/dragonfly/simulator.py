@@ -127,6 +127,11 @@ class SimParams:
     #: "dragonfly", "dragonfly_plus", "fattree") optionally with kwargs,
     #: e.g. "dragonfly:p=2,a=4,h=2".  docs/topology.md.
     topology: str = "aries"
+    #: reroute-or-drop penalty (us) charged to a flow whose every
+    #: candidate path crosses a dead link (or whose NIC link is dead)
+    #: under an active fault schedule — models the retransmit/timeout
+    #: cost of losing all routes.  docs/faults.md.
+    fault_penalty_us: float = 500.0
     #: accumulate per-stage wall times into sim.stage_time_s (perf_sim.py)
     profile_stages: bool = False
 
@@ -152,10 +157,18 @@ class FlowResult:
     tenant_link_loads: np.ndarray | None = None
     link_load_q: np.ndarray | None = None
     tenant_nonmin_fraction: np.ndarray | None = None
+    #: fault path (docs/faults.md): bool [n_app], True for app flows with
+    #: zero surviving candidate paths this phase (charged the
+    #: reroute-or-drop penalty); None when no fault was active
+    stranded: np.ndarray | None = None
 
     @property
     def phase_time_us(self) -> float:
         return float(self.t_us.max()) if self.t_us.size else 0.0
+
+    @property
+    def n_stranded(self) -> int:
+        return int(self.stranded.sum()) if self.stranded is not None else 0
 
     def tenant_slice(self, k: int) -> np.ndarray:
         """Row indices of tenant `k`'s app flows (post-subsample order)."""
@@ -274,7 +287,7 @@ class PhasePlan:
 
 class DragonflySimulator:
     def __init__(self, topo: Topology | None = None,
-                 params: SimParams = SimParams()):
+                 params: SimParams = SimParams(), faults=None):
         if params.backend not in BACKENDS:
             raise ValueError(f"unknown backend {params.backend!r}; "
                              f"expected one of {BACKENDS}")
@@ -297,6 +310,26 @@ class DragonflySimulator:
         self._plan_cache: dict = {}
         #: accumulated per-stage wall time (params.profile_stages)
         self.stage_time_s: dict[str, float] = {}
+        #: fault injection (docs/faults.md): phase index of the NEXT
+        #: run_phase call, and the bound schedule (None = healthy machine)
+        self.phase_index = 0
+        self.faults = None
+        if faults is not None:
+            self.set_faults(faults)
+
+    def set_faults(self, schedule) -> None:
+        """Install a :class:`repro.faults.FaultSchedule` (binding it to
+        this simulator's topology).  An empty/None schedule restores the
+        healthy machine — output is then bit-identical to a fault-free
+        simulator, seed-for-seed (tests/test_faults.py)."""
+        if schedule and not hasattr(schedule, "state_at"):
+            schedule = schedule.bind(self.topo)   # FaultSchedule -> bound
+        self.faults = schedule or None
+
+    def fault_epoch(self) -> int:
+        """Fault epoch of the NEXT phase (keys the plan cache)."""
+        return self.faults.epoch_at(self.phase_index) \
+            if self.faults is not None else 0
 
     # --------------------------------------------------------- counter API
     def backend_for(self, allocation_id: str):
@@ -421,13 +454,21 @@ class DragonflySimulator:
 
     def plan_for(self, src_nodes, dst_nodes, bytes_) -> PhasePlan:
         """Content-addressed plan cache: repeated (src, dst, bytes)
-        patterns get one shared PhasePlan per simulator."""
+        patterns get one shared PhasePlan per simulator.
+
+        The key also covers the topology spec and the CURRENT fault
+        epoch: a plan drawn on the healthy machine must not be replayed
+        once a fault changes the link set (its frozen candidate paths
+        would silently keep routing into dead links), so every fault
+        epoch recomputes — the plan-level half of rerouting."""
         import hashlib
 
         src = np.asarray(src_nodes, dtype=np.int64)
         dst = np.asarray(dst_nodes, dtype=np.int64)
         size = np.asarray(bytes_, dtype=np.float64)
         h = hashlib.sha1()
+        h.update(self.topo.spec_str().encode())
+        h.update(str(self.fault_epoch()).encode())
         for a in (src, dst, size):
             h.update(a.tobytes())
         key = h.digest()
@@ -469,6 +510,17 @@ class DragonflySimulator:
         if tenants is not None and allocation is not None:
             raise ValueError("pass either allocation= or tenants=, not both")
         tenant_of = None
+
+        # --- fault state for this phase (docs/faults.md) -------------------
+        # None = healthy machine: every fault-path branch below is skipped
+        # and the phase is bit-identical to a fault-free simulator.
+        fstate = self.faults.state_at(self.phase_index) \
+            if self.faults is not None else None
+        self.phase_index += 1
+        if fstate is not None and fstate.any_dead:
+            # a downed link holds no backlog and leaves no stale estimate
+            self.link_queue_s[fstate.dead] = 0.0
+            self.est_memory_s[fstate.dead] = 0.0
 
         # --- app flows: from the plan, or validated + subsampled fresh ----
         if plan is not None:
@@ -561,6 +613,28 @@ class DragonflySimulator:
                 packets_all = plan.packets
         n_all = safe.shape[0]
         ncand = safe.shape[1]
+
+        # --- fault masking: kill candidates that cross dead links ----------
+        # Vectorized through the same PAD-masked tensors as the fast path:
+        # one gather of the dead-link flags over `safe` (PAD entries gather
+        # link 0 but are ANDed away by `valid`).  A row whose injection or
+        # ejection NIC link is down (router_down takes its hosted nodes
+        # along) loses every candidate; rows with no survivor are
+        # `stranded` — they spray nowhere and pay fault_penalty_us.
+        cand_mask = stranded = None
+        if fstate is not None and fstate.any_dead:
+            fdead = fstate.dead
+            if plan is None:
+                dst_all_nodes = dst_all
+            elif bg is not None:
+                dst_all_nodes = np.concatenate([plan.dst, bg[1]])
+            else:
+                dst_all_nodes = plan.dst
+            row_dead = fdead[nic_ids] \
+                | fdead[np.asarray(topo.nic_link(dst_all_nodes))]
+            cand_mask = ~((fdead[safe] & valid).any(axis=-1)) \
+                & ~row_dead[:, None]
+            stranded = ~cand_mask.any(axis=-1)
         if prof:
             t0 = self._stage("candidates", t0)
 
@@ -575,8 +649,15 @@ class DragonflySimulator:
         # (stall-free flit serialization of the largest app message; floored
         # so transient small messages do not self-congest)
         window_s = max(ser_s_app, p.min_phase_window_s)
-        cap_bps = topo.capacity_gbs * 1e9
-        inj_cap = topo.capacity_gbs[nic_ids] * 1e9 * window_s
+        cap_gbs = topo.capacity_gbs
+        if fstate is not None:
+            # degraded links keep a fraction of their capacity; DEAD links
+            # keep the nominal value (they carry zero load thanks to the
+            # candidate mask, and 0-capacity would poison rho with inf)
+            cap_gbs = cap_gbs * np.where(fstate.dead, 1.0,
+                                         fstate.capacity_scale)
+        cap_bps = cap_gbs * 1e9
+        inj_cap = cap_gbs[nic_ids] * 1e9 * window_s
         size_inst = np.minimum(size_all, inj_cap)
         bg_policy = RoutingPolicy(RoutingMode.ADAPTIVE_0)
 
@@ -613,8 +694,10 @@ class DragonflySimulator:
             t0 = self._stage("estimate", t0)
 
         # --- fixed point + observables (backend-dispatched) ----------------
+        # faulted phases (cand_mask set) always run the numpy kernel: the
+        # jax pipeline has no mask plumbing, and fault phases are rare
         kernel = self._fixed_point_numpy
-        if p.backend == "jax":
+        if p.backend == "jax" and cand_mask is None:
             from repro.compat.runtime import resolve_backend
             if resolve_backend(p.backend) == "jax":
                 from repro.dragonfly.jax_backend import fixed_point_jax
@@ -627,7 +710,8 @@ class DragonflySimulator:
             size_inst=size_inst, size_all=size_all,
             pair_links=pair_links, pair_fc=pair_fc, nic_load=nic_load,
             nic_ids=nic_ids, cap_window=cap_bps * window_s,
-            window_s=window_s)
+            window_s=window_s,
+            **({} if cand_mask is None else {"cand_mask": cand_mask}))
         w_app = w[:n_app]
         if prof:
             t0 = self._stage("fixed_point", t0)
@@ -638,6 +722,13 @@ class DragonflySimulator:
         lat_cycles = lat_us * 1e3 * p.nic_clock_ghz
         t_cycles = win * lat_cycles + flits * (s_flit + 1.0)
         t_us = t_cycles / (1e3 * p.nic_clock_ghz)
+        if stranded is not None and stranded.any():
+            # reroute-or-drop: a flow with zero surviving paths sprays
+            # nowhere (all-inf softmin row -> zero weights) and its message
+            # time is the retransmit/timeout penalty on top of the local
+            # serialization cost — surfaced in t_us so phase durations,
+            # victim slowdown, and recovery metrics all see the fault
+            t_us = t_us + stranded * p.fault_penalty_us
         duration_s = max(float(t_us[:n_app].max()) * 1e-6, 1e-7) \
             if n_app else window_s
         # "network tile" aggregate: every job's flits on the wire (what a
@@ -655,10 +746,18 @@ class DragonflySimulator:
         # --- NIC counters (§2.3): one allocation, or per tenant segment ----
         app_flits, app_packets = flits[:n_app], packets[:n_app]
         app_lat, app_stalls = lat_us[:n_app], s_flit[:n_app]
+        # counter_dropout fault: the allocation's NIC telemetry goes dark —
+        # no observe(), so readers see a frozen snapshot and the
+        # PolicyEngine staleness guard (docs/faults.md) eventually trips
+        def _dark(aid):
+            return fstate is not None and fstate.counters_blocked(aid)
+
         if tenants is not None:
             # each tenant sees ONLY its own NICs (§3.2: users cannot see
             # other jobs' counters) — K masked observes, one per segment
             for k, alloc_k in enumerate(tenants.allocations):
+                if _dark(alloc_k.allocation_id):
+                    continue
                 mk = tenant_of == k
                 c = self.counters.setdefault(alloc_k.allocation_id,
                                              NICCounters())
@@ -670,7 +769,7 @@ class DragonflySimulator:
                     latency_us_total=float((app_lat[mk]
                                             * app_packets[mk]).sum()),
                 )
-        elif allocation is not None:
+        elif allocation is not None and not _dark(allocation.allocation_id):
             c = self.counters.setdefault(allocation.allocation_id,
                                          NICCounters())
             c.observe(
@@ -720,6 +819,7 @@ class DragonflySimulator:
             tenant_link_loads=t_loads,
             link_load_q=np.asarray(load_q) if tenants is not None else None,
             tenant_nonmin_fraction=t_nonmin,
+            stranded=stranded[:n_app] if stranded is not None else None,
         )
 
     # ----------------------------------------------------- numpy fixed point
@@ -728,15 +828,28 @@ class DragonflySimulator:
                            hl_rows, is_nonmin, bias_rows, posinf, neginf,
                            t_rows, noise_scale, gnoise, size_inst,
                            size_all, pair_links, pair_fc, nic_load,
-                           nic_ids, cap_window, window_s):
+                           nic_ids, cap_window, window_s, cand_mask=None):
         """Spray/feedback fixed point + observables, NumPy backend.
 
         Within-phase adaptive feedback: later packets see queues built by
         earlier ones and re-equilibrate (per-packet real-time sensing).
         Damped (w <- (w + w_target)/2) to avoid synchronous flip-flopping.
+
+        ``cand_mask`` (fault path, docs/faults.md): bool [n, ncand];
+        False candidates cross a dead link and are forced to +inf right
+        before every softmin, so they get exactly zero spray weight —
+        all-False rows (stranded flows) spray nowhere.  None (the
+        default, healthy machine) leaves the kernel byte-for-byte on
+        the bit-identical fast path.
         """
         p = sim.params
         n_links = sim.topo.n_links
+        if cand_mask is None:
+            def fmask(s):
+                return s
+        else:
+            def fmask(s):
+                return np.where(cand_mask, s, np.inf)
 
         def loads(w):
             # bytes offered DURING the window (a flow cannot inject more
@@ -745,7 +858,7 @@ class DragonflySimulator:
             return np.bincount(pair_links, weights=vals,
                                minlength=n_links) + nic_load
 
-        w = softmin_weights(score0, t_rows, gnoise[0], noise_scale)
+        w = softmin_weights(fmask(score0), t_rows, gnoise[0], noise_scale)
         load_i = loads(w)
         for it in range(1, gnoise.shape[0]):
             rho_fb = load_i / cap_window
@@ -768,7 +881,7 @@ class DragonflySimulator:
                                          posinf[rows], neginf[rows])
             else:
                 score = score0
-            w = 0.5 * (w + softmin_weights(score, t_rows, gnoise[it],
+            w = 0.5 * (w + softmin_weights(fmask(score), t_rows, gnoise[it],
                                            noise_scale))
             load_i = loads(w)
 

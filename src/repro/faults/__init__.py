@@ -1,0 +1,21 @@
+"""repro.faults — deterministic fault injection for the Dragonfly stack.
+
+Declarative :class:`FaultSpec`/:class:`FaultSchedule` (docs/faults.md)
+with phase-indexed activation windows, bound to a topology for
+per-phase machine state, plus the heartbeat-driven detection front end
+over ``runtime.fault_tolerance``.
+"""
+
+from repro.faults.detection import (DetectionReport, HeartbeatDriver,
+                                    remap_allocation)
+from repro.faults.spec import (BoundFaultSchedule, FaultSchedule, FaultSpec,
+                               FaultState, counter_dropout, link_degrade,
+                               link_down, link_flap, random_links,
+                               random_routers, router_down)
+
+__all__ = [
+    "FaultSpec", "FaultSchedule", "BoundFaultSchedule", "FaultState",
+    "link_down", "link_degrade", "router_down", "link_flap",
+    "counter_dropout", "random_links", "random_routers",
+    "HeartbeatDriver", "DetectionReport", "remap_allocation",
+]

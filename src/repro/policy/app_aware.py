@@ -494,6 +494,33 @@ class AppAwarePolicy:
             return list(self._table.keys)
         return list(self._sites)
 
+    def reset_samples(self, site_filter=None) -> int:
+        """Forget latency/stall samples for the matching sites.
+
+        Fault-epoch hook (docs/faults.md): when the machine's link set
+        changes, est_memory-driven samples gathered BEFORE the epoch
+        describe paths that may no longer exist — Algorithm 1 would keep
+        regime-switching on contaminated evidence.  Dropping the samples
+        (ages back to "never observed") makes the automaton re-measure
+        both arms from scratch; the current regime and traffic ledgers
+        are decisions, not measurements, and are kept.  `site_filter`
+        (key -> bool, e.g. ``scoped_site_filter(tenant)``) restricts the
+        reset to the affected sites; None resets every site.  Returns
+        the number of sites reset."""
+        n = 0
+        if self.granularity == "phase":
+            for key, row in self._table.keys.items():
+                if site_filter is None or site_filter(key):
+                    self._table.age[row, :] = -1
+                    n += 1
+        else:
+            for key, st in self._sites.items():
+                if site_filter is None or site_filter(key):
+                    st.samples = {}
+                    st._pending_mode = None
+                    n += 1
+        return n
+
     def _ledgers(self, site_filter=None) -> list:
         keyed = self._table.keys.items() if self.granularity == "phase" \
             else {k: st for k, st in self._sites.items()}.items()

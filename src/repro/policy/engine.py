@@ -30,9 +30,22 @@ POLICY_NAMES = ("static", "app_aware", "eps_greedy")
 
 
 class PolicyEngine:
-    """Vectorized decision front-end over a pluggable Policy."""
+    """Vectorized decision front-end over a pluggable Policy.
 
-    def __init__(self, policy: Policy, bus: TelemetryBus | None = None):
+    Bounded-staleness guard (docs/faults.md): an adaptive policy steered
+    by telemetry that stopped arriving (NIC-counter dropout, a crashed
+    collector) is worse than no policy — it keeps acting on a frozen,
+    possibly fault-contaminated estimate.  With ``staleness_limit=k``
+    the engine counts decide() calls since the last feedback delivery;
+    at >= k it stops consulting the policy and emits ``fallback_mode``
+    (default minimal / ADAPTIVE_3, the paper's safe static arm) until
+    telemetry resumes, which instantly restores the policy path.
+    ``staleness_limit=None`` (default) disables the guard.
+    """
+
+    def __init__(self, policy: Policy, bus: TelemetryBus | None = None, *,
+                 staleness_limit: int | None = None,
+                 fallback_mode=None):
         self.policy = policy
         self.bus = bus if bus is not None else TelemetryBus()
         self.bus.subscribe(self._on_feedback)
@@ -41,12 +54,31 @@ class PolicyEngine:
         self.rows_decided = 0
         self._last_batch: DecisionBatch | None = None
         self.last_modes: np.ndarray | None = None
+        self.staleness_limit = staleness_limit
+        self.fallback_mode = (fallback_mode if fallback_mode is not None
+                              else RoutingMode.ADAPTIVE_3)
+        self.decides_since_feedback = 0
+        self.fallback_decides = 0
+
+    @property
+    def degraded(self) -> bool:
+        """True while the staleness guard forces fallback decisions."""
+        return (self.staleness_limit is not None
+                and self.decides_since_feedback >= self.staleness_limit)
 
     # ----------------------------------------------------------------- decide
     def decide(self, batch: DecisionBatch) -> np.ndarray:
         """One call, [n] decisions.  Returns an object array of modes."""
-        modes = self.policy.decide(batch)
-        gated = getattr(self.policy, "last_gated", None)
+        if self.degraded:
+            # stale telemetry: bypass the policy, emit the static
+            # fallback arm (policy state stays frozen, not contaminated)
+            modes = np.full(len(batch), self.fallback_mode, dtype=object)
+            self.fallback_decides += 1
+            gated = None
+        else:
+            modes = self.policy.decide(batch)
+            self.decides_since_feedback += 1
+            gated = getattr(self.policy, "last_gated", None)
         self.ledger.add_batch(modes, batch.msg_bytes, gated=gated)
         self.decide_calls += 1
         self.rows_decided += len(batch)
@@ -76,7 +108,21 @@ class PolicyEngine:
         self.policy.update(b, feedback)
 
     def _on_feedback(self, feedback: Feedback) -> None:
+        # telemetry arrived: the staleness clock restarts (recovering
+        # from a degraded stretch the moment counters resume)
+        self.decides_since_feedback = 0
         self.update(feedback)
+
+    # ------------------------------------------------------------------ faults
+    def on_fault_epoch(self, site_filter=None) -> int:
+        """Fault-epoch notification (docs/faults.md): the machine's link
+        set changed, so latency/stall samples gathered before the epoch
+        no longer describe the paths being scored.  Forwards to the
+        policy's ``reset_samples`` (AppAware/EpsilonGreedy; static
+        policies have no state) for the sites matching ``site_filter``
+        (None = all).  Returns the number of sites reset."""
+        reset = getattr(self.policy, "reset_samples", None)
+        return reset(site_filter) if reset is not None else 0
 
     # ------------------------------------------------------------------ stats
     def traffic_fraction(self, mode: Hashable, *,
@@ -98,12 +144,17 @@ def make_engine(name: str, *,
                 epsilon_decay: float = 0.15,
                 static_mode: Hashable = None,
                 seed: int = 0,
-                bus: TelemetryBus | None = None) -> PolicyEngine:
+                bus: TelemetryBus | None = None,
+                staleness_limit: int | None = None,
+                fallback_mode: Hashable = None) -> PolicyEngine:
     """Factory mapping CLI names to engines.
 
     "static"     -> StaticPolicy(static_mode or mode_a)
     "app_aware"  -> AppAwarePolicy (Algorithm 1)
     "eps_greedy" -> EpsilonGreedyPolicy over (mode_a, mode_b)
+
+    ``staleness_limit``/``fallback_mode`` arm the engine's bounded-
+    staleness guard (docs/faults.md).
     """
     if mode_a_alltoall is None:
         # default-arm case: alltoall sites use INCR-MINIMAL (paper §4.2),
@@ -127,4 +178,5 @@ def make_engine(name: str, *,
     else:
         raise ValueError(
             f"unknown policy {name!r}; expected one of {POLICY_NAMES}")
-    return PolicyEngine(policy, bus=bus)
+    return PolicyEngine(policy, bus=bus, staleness_limit=staleness_limit,
+                        fallback_mode=fallback_mode)

@@ -151,3 +151,18 @@ class EpsilonGreedyPolicy:
                     (1 - self.ema) * st.cost + self.ema * c
                 st.n += 1
         self._pending = []
+
+    def reset_samples(self, site_filter=None) -> int:
+        """Fault-epoch hook (docs/faults.md): drop the per-arm cost EMAs
+        for the matching sites — pre-fault costs describe a link set
+        that no longer exists.  The decayed-ε schedule restarts with
+        them, so the bandit re-explores the changed machine.  Returns
+        the number of sites reset."""
+        sites = {k[0] for k in self._arms} | set(self._site_steps)
+        hit = [s for s in sites
+               if site_filter is None or site_filter(s)]
+        for s in hit:
+            self._site_steps.pop(s, None)
+        for key in [k for k in self._arms if k[0] in set(hit)]:
+            del self._arms[key]
+        return len(hit)

@@ -16,6 +16,7 @@ Dragonfly substrate uses, fed by the ICI cost model on this container.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from functools import partial
 from typing import List, Optional
@@ -56,19 +57,63 @@ class ServeConfig:
 
 
 def route_kv_transfer(comm_engine, cost_model, nbytes: int, *,
-                      site="kv_transfer"):
+                      site="kv_transfer", transfer=None, max_retries: int = 2,
+                      backoff_s: float = 0.0, fallback_mode=None,
+                      sleep=None):
     """One policy decision + model-fed feedback for a KV-cache transfer.
 
     Factored out of ServeEngine so multi-allocation serving paths (and
     tests) can route transfers against a SHARED engine with per-
-    allocation scoped sites without building a model."""
+    allocation scoped sites without building a model.
+
+    Fault path (docs/faults.md): ``transfer`` (optional) is the callable
+    that actually moves the bytes with the decided mode; a False return
+    or an exception counts as a failed-path attempt.  The decided mode
+    is retried up to ``max_retries`` times with exponential backoff
+    (``backoff_s``, doubling; ``sleep`` is injectable for tests and
+    defaults to ``time.sleep``), then the transfer falls back to
+    ``fallback_mode`` — default ``CollectiveMode.DIRECT``, the
+    single-path mode with no hierarchical staging to lose.  Feedback is
+    published for the mode that finally carried the bytes, so the
+    policy learns the fallback's cost, not the phantom cost of the
+    failed decision.  ``transfer=None`` (default) keeps the legacy
+    decide-and-predict behavior exactly.
+    """
     from repro.policy import DecisionBatch
     mode = comm_engine.decide(DecisionBatch.single(nbytes, site=site))[0]
-    perf = cost_model.predict(nbytes, mode)
+    used = mode
+    if transfer is not None:
+        def attempt(m):
+            try:
+                return transfer(m) is not False
+            except Exception:
+                return False
+
+        if sleep is None:
+            sleep = time.sleep
+        ok = attempt(mode)
+        delay = backoff_s
+        for _ in range(max_retries):
+            if ok:
+                break
+            if delay > 0.0:
+                sleep(delay)
+                delay *= 2.0
+            ok = attempt(mode)
+        if not ok:
+            if fallback_mode is None:
+                from repro.collectives.modes import CollectiveMode
+                fallback_mode = CollectiveMode.DIRECT
+            used = fallback_mode
+            if not attempt(used):
+                raise RuntimeError(
+                    f"kv transfer failed: {max_retries} retries of "
+                    f"{mode} and the {used} fallback all failed")
+    perf = cost_model.predict(nbytes, used)
     comm_engine.bus.publish_flow_arrays(
         [perf.latency_cycles / 1e3], [perf.stall_cycles_per_flit],
         source="model")
-    return mode
+    return used
 
 
 def make_serve_step(cfg: ModelConfig):

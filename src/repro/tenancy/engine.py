@@ -48,6 +48,19 @@ class TenantReport:
     nonmin_fraction: float            # byte-weighted, from the breakdown
     nic: NICCounters                  # this allocation's counter snapshot
     alone_time_us: float | None = None
+    #: per-round completion + host time (recovery metrics need the
+    #: trajectory, not just the sum)
+    round_times_us: list = field(default_factory=list)
+    #: app flows that lost every candidate path to faults, summed over
+    #: rounds (docs/faults.md)
+    stranded_flows: int = 0
+    #: fault recovery (run_mix(faults=...) only, docs/faults.md):
+    #: rounds after the last fault clears until the per-round time is
+    #: back within tolerance of the pre-fault baseline, and the time
+    #: spent above baseline getting there.  -1 = never recovered within
+    #: the run; None = no faults / faults never clear.
+    recovery_rounds: int | None = None
+    recovery_time_us: float | None = None
 
     @property
     def slowdown(self) -> float | None:
@@ -67,6 +80,8 @@ class MixResult:
     tenants: list                     # [TenantReport], tenant order
     #: [K+1, n_links] mean per-round backlog bytes (row K = background)
     tenant_link_loads: np.ndarray | None = None
+    #: fault schedule summary when run with run_mix(faults=...), else None
+    faults: list | None = None
 
     @property
     def victim_report(self) -> TenantReport:
@@ -123,16 +138,22 @@ class InterferenceEngine:
         return make_topology(mix.topology) if mix.topology else self.topo
 
     def _run(self, workloads: Sequence[Workload], allocs: Sequence,
-             rounds: int, topo: Topology | None = None):
+             rounds: int, topo: Topology | None = None, faults=None):
         """Core loop: returns ([TenantReport], mean tenant_link_loads).
 
         Builds a FRESH simulator (deterministic in SimParams.seed), so a
         K=1 call is the run-alone baseline of that tenant on the same
         nodes — and is bit-identical, round for round, to driving
         run_phase(allocation=...) by hand (tests/test_tenancy.py).
+
+        `faults` (optional FaultSchedule, docs/faults.md): phase indices
+        are ROUND indices (one run_phase per round).  On every fault-
+        epoch transition each engine-armed tenant's policy samples are
+        reset via ``on_fault_epoch`` — measurements from the previous
+        link set would contaminate Algorithm 1's regime decisions.
         """
         sim = DragonflySimulator(topo if topo is not None else self.topo,
-                                 self.params)
+                                 self.params, faults=faults)
         p = self.params
         engines = self._engines_for(workloads, sim)
         phases = [w.phases() for w in workloads]
@@ -142,8 +163,20 @@ class InterferenceEngine:
         stl: list = [[] for _ in range(K)]
         nmf: list = [[] for _ in range(K)]
         wts: list = [[] for _ in range(K)]
+        round_t: list = [[] for _ in range(K)]
+        stranded = np.zeros(K, dtype=np.int64)
         loads_acc = None
+        last_epoch = 0
         for r in range(rounds):
+            if sim.faults is not None:
+                ep = sim.faults.epoch_at(r)
+                if ep != last_epoch:
+                    last_epoch = ep
+                    from repro.policy import scoped_site_filter
+                    for k, w in enumerate(workloads):
+                        if w.is_engine_arm:
+                            engines[k].on_fault_epoch(
+                                scoped_site_filter(w.name))
             srcs, dsts, byts, mode_l, counts = [], [], [], [], []
             for k, w in enumerate(workloads):
                 s, d, b = phases[k][r % len(phases[k])]
@@ -191,6 +224,9 @@ class InterferenceEngine:
                     host += self.counter_read_overhead_us
                 t_k = float(res.t_us[rows].max()) if rows.size else 0.0
                 time_us[k] += t_k + host
+                round_t[k].append(t_k + host)
+                if res.stranded is not None and rows.size:
+                    stranded[k] += int(res.stranded[rows].sum())
                 if rows.size:
                     lat[k].append(float(res.latency_us[rows].mean()))
                     stl[k].append(float(res.stalls_per_flit[rows].mean()))
@@ -209,7 +245,9 @@ class InterferenceEngine:
                 nonmin_fraction=float(np.average(nmf[k], weights=wk))
                 if nmf[k] else 0.0,
                 nic=sim.counters.get(allocs[k].allocation_id,
-                                     NICCounters()).snapshot()))
+                                     NICCounters()).snapshot(),
+                round_times_us=round_t[k],
+                stranded_flows=int(stranded[k])))
         if loads_acc is not None and rounds:
             loads_acc = loads_acc / rounds
         return reports, loads_acc
@@ -225,15 +263,70 @@ class InterferenceEngine:
                                topo=topo)
         return reports[0]
 
+    #: a round counts as recovered when its time is back within this
+    #: factor of the pre-fault per-round baseline
+    recovery_tolerance: float = 1.10
+
+    def _recovery(self, times: list, faults, clean=None) -> tuple:
+        """(recovery_rounds, recovery_time_us) from one tenant's
+        per-round trajectory (docs/faults.md).
+
+        `clean` (when given) is the same tenant's round trajectory from
+        a fault-free companion run of the SAME mix/seed — the round-for-
+        round baseline.  Workload phase lists cycle (round r replays
+        phase ``r % L``), so per-round times are periodic and a flat
+        scalar baseline would misread phase structure as non-recovery;
+        the companion trajectory compares like phase with like phase.
+        Without `clean`, baseline falls back to the mean pre-fault
+        per-round time (min over the run when faults start at round 0).
+
+        From the round the last fault clears, the first round back
+        within ``recovery_tolerance`` of its baseline marks recovery;
+        the rounds until then and the time they consumed are the
+        metrics.  (None, None) when the faults never clear inside the
+        run; (-1, -1.0) when they clear but the tenant never gets back
+        to baseline.
+        """
+        first = faults.first_start()
+        clear = faults.all_clear_phase()
+        if first is None or clear is None or clear >= len(times):
+            return None, None
+        if clean is None:
+            base = float(np.mean(times[:first])) if first > 0 \
+                else float(np.min(times))
+            clean = [base] * len(times)
+        for i in range(clear, len(times)):
+            if times[i] <= self.recovery_tolerance * clean[i]:
+                return i - clear, float(np.sum(times[clear:i]))
+        return -1, -1.0
+
     def run_mix(self, mix: TenancyMix, *, rounds: int = 4,
-                baselines: bool = True) -> MixResult:
-        """Run the whole mix; with baselines, score per-tenant slowdown."""
+                baselines: bool = True, faults=None) -> MixResult:
+        """Run the whole mix; with baselines, score per-tenant slowdown.
+
+        `faults` (optional FaultSchedule): inject faults into the mix
+        run — round index == fault phase index.  Run-alone baselines
+        stay CLEAN (healthy machine), so victim slowdown under faults
+        reports the tenant's TOTAL degradation (interference + faults);
+        comparing policies under the same schedule isolates the policy
+        effect.  Per-tenant recovery metrics (recovery_rounds /
+        recovery_time_us) are scored against a fault-free companion run
+        of the same mix (round-for-round baseline, see _recovery).
+        """
         topo = self._topo_for(mix)
         allocs = mix.materialize(topo, seed=self.seed)
-        reports, loads = self._run(mix.workloads, allocs, rounds, topo=topo)
+        reports, loads = self._run(mix.workloads, allocs, rounds,
+                                   topo=topo, faults=faults)
         if baselines:
             for k in range(len(mix)):
                 alone = self.run_alone(mix, k, rounds=rounds, allocs=allocs)
                 reports[k].alone_time_us = alone.time_us
+        if faults:
+            clean, _ = self._run(mix.workloads, allocs, rounds, topo=topo)
+            for rep, ref in zip(reports, clean):
+                rep.recovery_rounds, rep.recovery_time_us = \
+                    self._recovery(rep.round_times_us, faults,
+                                   clean=ref.round_times_us)
         return MixResult(mix=mix.name, rounds=rounds, victim=mix.victim,
-                         tenants=reports, tenant_link_loads=loads)
+                         tenants=reports, tenant_link_loads=loads,
+                         faults=faults.describe() if faults else None)

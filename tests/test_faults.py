@@ -1,0 +1,494 @@
+"""repro.faults guarantees (docs/faults.md): schedule/epoch semantics,
+zero-fault bit-identity across the topology family, dead-link masking
+physics, the fault-epoch plan-cache key, the PolicyEngine staleness
+guard end-to-end over NIC-counter dropout, serve retry/fallback,
+heartbeat-driven detection with elastic shrink, and the tenancy
+recovery metrics."""
+
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core.strategies import RoutingMode
+from repro.dragonfly import (DragonflySimulator, SimParams,
+                             registered_topologies, small_topology)
+from repro.dragonfly import invariants as inv
+from repro.dragonfly.routing import RoutingPolicy
+from repro.dragonfly.topology import make_allocation
+from repro.faults import (FaultSchedule, HeartbeatDriver, counter_dropout,
+                          link_degrade, link_down, link_flap,
+                          remap_allocation, router_down)
+from repro.policy import DecisionBatch, make_engine, scoped_site_filter
+from repro.runtime.fault_tolerance import (FaultToleranceConfig,
+                                           RestartAction)
+from repro.tenancy import InterferenceEngine, TenancyMix, Workload
+
+ALL_NAMES = registered_topologies()
+SMALL = {name: small_topology(name) for name in ALL_NAMES}
+POLICY = RoutingPolicy(RoutingMode.ADAPTIVE_0)
+
+
+def _digest(a) -> str:
+    return hashlib.sha256(np.ascontiguousarray(a).tobytes()) \
+        .hexdigest()[:16]
+
+
+def _flows(topo, seed=3, n=64):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, topo.n_nodes, size=n)
+    dst = (src + rng.integers(1, topo.n_nodes, size=n)) % topo.n_nodes
+    size = rng.pareto(1.2, size=n) * 65536 + 1024
+    return src, dst, size
+
+
+# --------------------------------------------------------------------------
+# Spec / schedule semantics.
+# --------------------------------------------------------------------------
+def test_windows_and_flap_square_wave():
+    s = link_down([0], start=2, end=5)
+    assert [s.active_at(p) for p in range(7)] == \
+        [False, False, True, True, True, False, False]
+    f = link_flap([0], start=1, end=9, period=3, duty=1)
+    assert [f.active_at(p) for p in range(10)] == \
+        [False, True, False, False, True, False, False, True, False, False]
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        link_down([0], start=5, end=3)
+    with pytest.raises(ValueError):
+        link_degrade(1.5, [0])
+    with pytest.raises(ValueError):
+        link_flap([0], period=0)
+
+
+def test_schedule_clear_and_start():
+    sched = FaultSchedule.of(link_down([0], start=2, end=5),
+                             link_degrade(0.5, [1], start=1, end=7))
+    assert sched.first_start() == 1
+    assert sched.all_clear_phase() == 7
+    assert FaultSchedule.of(link_down([0], start=2)).all_clear_phase() \
+        is None
+    assert not FaultSchedule()
+    assert FaultSchedule().first_start() is None
+
+
+def test_epochs_count_active_set_changes():
+    topo = SMALL["aries"]
+    bound = FaultSchedule.of(link_down([0], start=2, end=4),
+                             link_down([1], start=3, end=5)).bind(topo)
+    # active sets per phase: {}, {}, {0}, {0,1}, {1}, {}, {}
+    assert [bound.epoch_at(p) for p in range(7)] == [0, 0, 1, 2, 3, 4, 4]
+    assert bound.state_at(0) is None
+    assert bound.state_at(2).dead[0] and not bound.state_at(2).dead[1]
+    assert bound.state_at(5) is None
+
+
+def test_explicit_ids_validated_on_bind():
+    topo = SMALL["aries"]
+    with pytest.raises(ValueError):
+        FaultSchedule.of(link_down([topo.n_links])).bind(topo)
+    with pytest.raises(ValueError):
+        FaultSchedule.of(router_down([topo.n_routers])).bind(topo)
+
+
+def test_capacity_scale_composition():
+    topo = SMALL["aries"]
+    bound = FaultSchedule.of(link_degrade(0.5, [3]),
+                             link_degrade(0.4, [3, 4]),
+                             link_down([5])).bind(topo)
+    st = bound.state_at(0)
+    assert st.capacity_scale[3] == pytest.approx(0.2)
+    assert st.capacity_scale[4] == pytest.approx(0.4)
+    assert st.capacity_scale[5] == 0.0 and st.dead[5]
+    inv.check_capacity_scale(topo, st)
+
+
+# --------------------------------------------------------------------------
+# Zero-fault bit-identity across the whole topology family: an empty
+# schedule, and a schedule whose windows never activate, replay the
+# fault-free simulator seed-for-seed (digest pin, docs/faults.md).
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_zero_fault_bit_identity(name):
+    topo = SMALL[name]
+    src, dst, size = _flows(topo)
+    idle = FaultSchedule.of(link_down([0], start=100, end=200),
+                            router_down([0], start=100, end=200))
+    runs = []
+    for faults in (None, FaultSchedule(), idle):
+        sim = DragonflySimulator(topo, SimParams(seed=11), faults=faults)
+        digests = []
+        for _ in range(3):
+            res = sim.run_phase(src, dst, size, POLICY)
+            digests.append((_digest(res.t_us), _digest(res.latency_us),
+                            _digest(res.stalls_per_flit),
+                            _digest(sim.link_queue_s)))
+            assert res.stranded is None or not res.stranded.any()
+        runs.append(digests)
+    assert runs[0] == runs[1] == runs[2]
+    # the empty schedule is falsy and never even binds
+    assert DragonflySimulator(topo, SimParams(seed=11),
+                              faults=FaultSchedule()).faults is None
+
+
+# --------------------------------------------------------------------------
+# Masking physics.
+# --------------------------------------------------------------------------
+def test_all_global_links_down_strands_intergroup_flows():
+    topo = SMALL["aries"]
+    lo, hi = topo.link_ranges()["global"]
+    sched = FaultSchedule.of(link_down(range(lo, hi)))
+    sim = DragonflySimulator(topo, SimParams(seed=2, bg_enable=False),
+                             faults=sched)
+    src, dst, size = _flows(topo, n=96)
+    res = sim.run_phase(src, dst, size, POLICY)
+    inter = np.asarray(topo.group_of_node(src)) \
+        != np.asarray(topo.group_of_node(dst))
+    assert res.stranded is not None
+    assert np.array_equal(res.stranded, inter)
+    assert res.n_stranded == int(inter.sum()) > 0
+    # stranded flows pay the reroute-or-drop penalty
+    assert (res.t_us[inter] >= sim.params.fault_penalty_us).all()
+
+
+def test_router_down_strands_its_nodes():
+    topo = SMALL["dragonfly"]
+    sched = FaultSchedule.of(router_down([0])).bind(topo)
+    down = set(int(n) for n in sched.down_nodes_at(0))
+    assert down                      # the router hosts p nodes
+    sim = DragonflySimulator(topo, SimParams(seed=2, bg_enable=False),
+                             faults=sched)
+    src, dst, size = _flows(topo, n=96)
+    res = sim.run_phase(src, dst, size, POLICY)
+    touches = np.asarray([int(s) in down or int(d) in down
+                          for s, d in zip(src, dst)])
+    assert np.array_equal(res.stranded, touches)
+
+
+def test_degraded_capacity_slows_the_phase():
+    topo = SMALL["aries"]
+    src, dst, size = _flows(topo, n=96)
+    times = {}
+    brownout = FaultSchedule.of(link_degrade(0.05, range(topo.n_links)))
+    for label, faults in (("healthy", None), ("brownout", brownout)):
+        sim = DragonflySimulator(topo, SimParams(seed=2, bg_enable=False),
+                                 faults=faults)
+        times[label] = float(sim.run_phase(src, dst, size, POLICY)
+                             .t_us.sum())
+    assert times["brownout"] > times["healthy"]
+
+
+def test_dead_links_carry_no_queue():
+    topo = SMALL["aries"]
+    lo, hi = topo.link_ranges()["global"]
+    dead_ids = [lo, lo + 1]
+    sim = DragonflySimulator(topo, SimParams(seed=2, bg_enable=False),
+                             faults=FaultSchedule.of(link_down(dead_ids)))
+    src, dst, size = _flows(topo, n=96)
+    for _ in range(3):
+        sim.run_phase(src, dst, size, POLICY)
+        assert (sim.link_queue_s[dead_ids] == 0.0).all()
+
+
+# --------------------------------------------------------------------------
+# Fault-mask invariants across the family (the ci_lint --topology battery
+# is the headless twin of this test).
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_fault_mask_invariants(name):
+    topo = SMALL[name]
+    bound = FaultSchedule.of(
+        link_down(n_random=2, seed=11),
+        link_degrade(0.25, n_random=1, seed=12),
+        router_down([0])).bind(topo)
+    st = bound.state_at(0)
+    inv.check_capacity_scale(topo, st)
+    src, dst = inv.sample_pairs(topo, n=48, seed=2)
+    inv.check_fault_mask(topo, st.dead, src, dst,
+                         rng=np.random.default_rng(8))
+    inv.check_fault_mask(topo, np.zeros(topo.n_links, dtype=bool),
+                         src, dst, rng=np.random.default_rng(8))
+
+
+# --------------------------------------------------------------------------
+# Plan cache: the content key covers the fault epoch, so a plan drawn on
+# the healthy machine is not replayed into a changed link set.
+# --------------------------------------------------------------------------
+def test_plan_cache_recomputes_on_fault_epoch():
+    topo = SMALL["aries"]
+    sched = FaultSchedule.of(link_down([0], start=1, end=3))
+    sim = DragonflySimulator(topo, SimParams(seed=4, bg_enable=False),
+                             faults=sched)
+    src, dst, size = _flows(topo, n=32)
+    p0 = sim.plan_for(src, dst, size)
+    assert sim.plan_for(src, dst, size) is p0      # same epoch: cached
+    sim.run_phase(src, dst, size, POLICY, plan=p0)  # phase 0 -> 1: epoch 1
+    assert sim.fault_epoch() == 1
+    p1 = sim.plan_for(src, dst, size)
+    assert p1 is not p0                             # fault epoch recomputes
+    sim.run_phase(src, dst, size, POLICY, plan=p1)
+    sim.run_phase(src, dst, size, POLICY)           # phase 2 -> 3: cleared
+    assert sim.plan_for(src, dst, size) is not p1
+
+
+# --------------------------------------------------------------------------
+# Staleness guard end-to-end: counter dropout freezes the NIC counters,
+# the engine stops hearing feedback, degrades to the static fallback,
+# and recovers the moment counters resume.
+# --------------------------------------------------------------------------
+def test_staleness_fallback_end_to_end():
+    topo = SMALL["aries"]
+    alloc = make_allocation(topo, 8, spread="inter_groups", seed=1)
+    sched = FaultSchedule.of(counter_dropout(start=2, end=5))
+    sim = DragonflySimulator(topo, SimParams(seed=6, bg_enable=False),
+                             faults=sched)
+    eng = make_engine("app_aware", staleness_limit=2,
+                      fallback_mode=RoutingMode.MIN_HASH)
+    backend = sim.backend_for(alloc.allocation_id)
+    rng = np.random.default_rng(0)
+    nodes = np.asarray(alloc.nodes)
+    src = nodes[rng.integers(0, len(nodes), size=40)]
+    dst = nodes[(np.arange(40) + 1) % len(nodes)]
+    size = np.full(40, 1 << 20, dtype=np.float64)
+    last_pkts, trace = 0, []
+    for phase in range(8):
+        was_degraded = eng.degraded     # the state this decide() sees
+        modes = eng.decide(DecisionBatch.of(size, site="s"))
+        trace.append((phase, was_degraded, set(modes.tolist())))
+        res = sim.run_phase(src, dst, size, POLICY, allocation=alloc,
+                            modes=modes)
+        pkts = backend.read_counters().request_packets
+        if pkts > last_pkts:           # counters advanced: telemetry
+            last_pkts = pkts
+            eng.bus.publish_flow_arrays([float(res.latency_us.mean())],
+                                        [float(res.stalls_per_flit.mean())])
+    degraded_phases = [p for p, d, _ in trace if d]
+    # dropout covers phases [2, 5): feedback stops after the phase-1
+    # publish, the guard trips after staleness_limit=2 silent decides,
+    # and recovery is immediate once counters resume at phase 5
+    assert degraded_phases == [4, 5]
+    for p, d, modeset in trace:
+        if d:
+            assert modeset == {RoutingMode.MIN_HASH}
+        else:
+            assert RoutingMode.MIN_HASH not in modeset
+    assert eng.fallback_decides == 2
+    assert not eng.degraded
+
+
+def test_on_fault_epoch_resets_scoped_sites_only():
+    eng = make_engine("app_aware")
+    for site in (("A", "a2a"), ("B", "a2a")):
+        for _ in range(3):
+            eng.decide(DecisionBatch.of(np.full(8, 1 << 20), site=site))
+            eng.bus.publish_flow_arrays([5.0] * 8, [0.2] * 8)
+    n = eng.on_fault_epoch(scoped_site_filter("A"))
+    assert n == 1                       # only A's site reset
+    assert eng.on_fault_epoch() >= 1    # None = all sites
+
+
+def test_eps_greedy_reset_samples_scoped():
+    eng = make_engine("eps_greedy")
+    for site in (("A", "s"), ("B", "s")):
+        eng.decide(DecisionBatch.of(np.full(8, 1 << 20), site=site))
+        eng.bus.publish_flow_arrays([5.0] * 8, [0.2] * 8)
+    assert eng.on_fault_epoch(scoped_site_filter("A")) == 1
+    assert eng.on_fault_epoch(scoped_site_filter("A")) == 0   # already gone
+
+
+# --------------------------------------------------------------------------
+# serve.route_kv_transfer: bounded retry with backoff, DIRECT fallback.
+# --------------------------------------------------------------------------
+def _serve_engine():
+    from repro.collectives.modes import CollectiveMode
+    from repro.collectives.selector import ICICostModel, MeshSpec
+    eng = make_engine("app_aware",
+                      mode_a=CollectiveMode.HIERARCHICAL,
+                      mode_b=CollectiveMode.DIRECT,
+                      mode_a_alltoall=CollectiveMode.HIERARCHICAL)
+    return eng, ICICostModel(MeshSpec(n_pods=2, inner_chips=256))
+
+
+def test_route_kv_transfer_retries_then_falls_back_to_direct():
+    from repro.collectives.modes import CollectiveMode
+    from repro.serve.engine import route_kv_transfer
+    eng, cost = _serve_engine()
+    attempts, sleeps = [], []
+
+    def transfer(mode):
+        attempts.append(mode)
+        return mode is CollectiveMode.DIRECT   # only DIRECT works
+
+    # big volume => the decided mode is HIERARCHICAL, which fails
+    used = route_kv_transfer(eng, cost, 1 << 30,
+                             site=("A", "kv_transfer"), transfer=transfer,
+                             max_retries=2, backoff_s=0.1,
+                             sleep=sleeps.append)
+    assert used is CollectiveMode.DIRECT
+    assert attempts == [CollectiveMode.HIERARCHICAL] * 3 \
+        + [CollectiveMode.DIRECT]
+    assert sleeps == [0.1, 0.2]                # exponential backoff
+
+
+def test_route_kv_transfer_success_needs_no_retry():
+    from repro.serve.engine import route_kv_transfer
+    eng, cost = _serve_engine()
+    attempts, sleeps = [], []
+    used = route_kv_transfer(eng, cost, 1 << 30,
+                             transfer=lambda m: attempts.append(m) or True,
+                             max_retries=2, backoff_s=0.1,
+                             sleep=sleeps.append)
+    assert len(attempts) == 1 and attempts[0] is used
+    assert sleeps == []
+    # legacy path: no transfer callable, one decide + one publish
+    assert route_kv_transfer(eng, cost, 1 << 10) is not None
+
+
+def test_route_kv_transfer_raises_when_fallback_fails():
+    from repro.serve.engine import route_kv_transfer
+    eng, cost = _serve_engine()
+    with pytest.raises(RuntimeError, match="fallback"):
+        route_kv_transfer(eng, cost, 1 << 30,
+                          transfer=lambda m: False, max_retries=1,
+                          sleep=lambda s: None)
+
+
+def test_kv_transfer_failures_stay_allocation_scoped():
+    from repro.collectives.modes import CollectiveMode
+    from repro.serve.engine import route_kv_transfer
+    eng, cost = _serve_engine()
+    # tenant B learns normally on its scoped site
+    for _ in range(3):
+        route_kv_transfer(eng, cost, 1 << 30, site=("B", "kv_transfer"))
+    before = eng.decide(DecisionBatch.single(
+        1 << 30, site=("B", "kv_transfer")))[0]
+    # tenant A's transfers fail over to DIRECT repeatedly
+    for _ in range(3):
+        route_kv_transfer(eng, cost, 1 << 30, site=("A", "kv_transfer"),
+                          transfer=lambda m: m is CollectiveMode.DIRECT,
+                          max_retries=1, sleep=lambda s: None)
+    after = eng.decide(DecisionBatch.single(
+        1 << 30, site=("B", "kv_transfer")))[0]
+    assert after == before             # B's automaton is untouched
+
+
+# --------------------------------------------------------------------------
+# Detection front end: suppressed heartbeats -> phi-accrual DEAD ->
+# ELASTIC_SHRINK re-materialisation off the down nodes.
+# --------------------------------------------------------------------------
+def test_heartbeat_driver_detects_and_shrinks_elastically():
+    topo = SMALL["dragonfly"]
+    bound = FaultSchedule.of(router_down([0], start=3)).bind(topo)
+    down = set(int(n) for n in bound.down_nodes_at(3))
+    # allocation straddling the doomed router
+    alloc = make_allocation(topo, 6, spread="inter_groups", seed=5)
+    if not down & set(int(n) for n in alloc.nodes):
+        nodes = tuple(sorted(down))[:1] + tuple(alloc.nodes)[:-1]
+        alloc = type(alloc)(allocation_id=alloc.allocation_id,
+                            nodes=nodes)
+    drv = HeartbeatDriver(bound, alloc, FaultToleranceConfig(), seed=9)
+    silenced = []
+    for phase in range(7):
+        silenced.append(drv.tick(phase))
+    assert silenced[2] == () and silenced[3] != ()
+    rep = drv.poll(6)
+    assert rep.action == RestartAction.ELASTIC_SHRINK
+    assert set(rep.dead_nodes) == down & set(int(n) for n in alloc.nodes)
+    new_nodes = set(int(n) for n in rep.allocation.nodes)
+    assert not (new_nodes & down)      # remapped off the dead router
+    assert len(rep.allocation.nodes) == len(alloc.nodes)
+    assert rep.allocation.allocation_id.endswith("@remap1")
+    # healthy machine: nothing detected, nothing remapped
+    assert drv.poll(6).action == RestartAction.NONE
+
+
+def test_remap_allocation_pool_semantics():
+    topo = SMALL["aries"]
+    alloc = make_allocation(topo, 4, spread="inter_groups", seed=0)
+    nodes = list(alloc.nodes)
+    used = [n for n in range(topo.n_nodes) if n not in nodes[0:1]]
+    # pool dry (every other node used): the dead rank is dropped
+    shrunk = remap_allocation(topo, alloc, [nodes[0]], used_nodes=used,
+                              seed=1, tag="t")
+    assert len(shrunk.nodes) == 3 and nodes[0] not in shrunk.nodes
+    # with a pool, rank order of survivors is preserved and the
+    # replacement avoids down/used nodes
+    remapped = remap_allocation(topo, alloc, [nodes[1]],
+                                down_nodes=[nodes[1]], seed=1, tag="t")
+    assert len(remapped.nodes) == 4
+    assert [n for n in remapped.nodes if n != remapped.nodes[1]] == \
+        [n for n in nodes if n != nodes[1]]
+    assert remapped.nodes[1] not in nodes
+    # no dead ranks: identity
+    assert remap_allocation(topo, alloc, []) is alloc
+
+
+# --------------------------------------------------------------------------
+# Tenancy integration: recovery metrics and per-tenant stranding.
+# --------------------------------------------------------------------------
+def _small_mix():
+    return TenancyMix("mix", (
+        Workload("vic", "halo3d", 12, {"nx": 32, "vars_": 2},
+                 arm="app_aware"),
+        Workload("agg", "alltoall", 12, {"size_per_pair": 8192},
+                 arm=RoutingMode.ADAPTIVE_0)))
+
+
+def test_run_mix_with_faults_reports_recovery():
+    topo = SMALL["aries"]
+    sched = FaultSchedule.of(
+        link_down(start=1, end=3, n_random=2, link_kind="global", seed=3))
+    eng = InterferenceEngine(topo, SimParams(seed=5, bg_enable=False),
+                             seed=5)
+    res = eng.run_mix(_small_mix(), rounds=6, faults=sched)
+    assert res.faults and res.faults[0]["kind"] == "link_down"
+    for rep in res.tenants:
+        assert len(rep.round_times_us) == 6
+        assert rep.recovery_rounds is not None
+        assert rep.recovery_rounds >= 0 or rep.recovery_rounds == -1
+        assert rep.stranded_flows >= 0
+        assert rep.slowdown is not None and rep.slowdown > 0
+    # the same mix without faults reports no recovery fields
+    clean = InterferenceEngine(topo, SimParams(seed=5, bg_enable=False),
+                               seed=5).run_mix(_small_mix(), rounds=6)
+    assert clean.faults is None
+    assert clean.victim_report.recovery_rounds is None
+
+
+def test_recovery_metric_math():
+    eng = InterferenceEngine(SMALL["aries"],
+                             SimParams(seed=0, bg_enable=False))
+    sched = FaultSchedule.of(link_down([0], start=2, end=4))
+    # recovers one round after clear: rounds=1, time=the slow round
+    assert eng._recovery([10.0, 10.0, 30.0, 30.0, 20.0, 10.0], sched) \
+        == (1, 20.0)
+    # immediate recovery
+    assert eng._recovery([10.0, 10.0, 30.0, 30.0, 10.5, 10.0], sched) \
+        == (0, 0.0)
+    # never back to baseline inside the run
+    assert eng._recovery([10.0, 10.0, 30.0, 30.0, 30.0, 30.0], sched) \
+        == (-1, -1.0)
+    # faults never clear: no recovery metric
+    open_ended = FaultSchedule.of(link_down([0], start=2))
+    assert eng._recovery([10.0] * 6, open_ended) == (None, None)
+    # clean companion trajectory: phase-periodic times recover even
+    # though a flat baseline would say -1
+    clean = [10.0, 40.0, 10.0, 40.0, 10.0, 40.0]
+    noisy = [10.0, 40.0, 90.0, 90.0, 10.0, 41.0]
+    assert eng._recovery(noisy, sched, clean=clean) == (0, 0.0)
+
+
+def test_run_mix_epoch_resets_engine_sites():
+    # a schedule changing mid-run must trigger on_fault_epoch for the
+    # engine-armed tenants (contaminated samples are discarded)
+    topo = SMALL["aries"]
+    sched = FaultSchedule.of(
+        link_degrade(0.5, start=2, end=4, n_random=2, link_kind="global",
+                     seed=7))
+    eng = InterferenceEngine(topo, SimParams(seed=5, bg_enable=False),
+                             seed=5)
+    res = eng.run_mix(_small_mix(), rounds=5, baselines=False,
+                      faults=sched)
+    assert res.victim_report.time_us > 0
