@@ -4,20 +4,34 @@
 PY ?= python
 
 .PHONY: test bench-smoke bench-perf bench-interference bench-faults \
-	lint docs
+	bench-notifications lint docs
 
-# tier-1 verify (ROADMAP): same flags as CI
+# coverage is OPTIONAL tooling: the floor is enforced only when
+# pytest-cov is importable (docs/testing.md — the container may not
+# ship it; the degradation is printed, never silent)
+COV_AVAILABLE := $(shell $(PY) -c "import importlib.util as u; print(1 if u.find_spec('pytest_cov') else 0)" 2>/dev/null)
+COV_FLOOR ?= 60
+COVFLAGS := $(if $(filter 1,$(COV_AVAILABLE)),--cov=repro --cov-fail-under=$(COV_FLOOR),)
+
+# tier-1 verify (ROADMAP): same selection as CI, plus the slowest-10
+# duration report and the (gated) ratcheted coverage floor
 test:
-	$(PY) -m pytest -x -q
+	@if [ "$(COV_AVAILABLE)" != "1" ]; then \
+		echo "NOTE: pytest-cov not installed — coverage floor ($(COV_FLOOR)%) NOT enforced this run"; \
+	fi
+	$(PY) -m pytest -x -q --durations=10 $(COVFLAGS)
 
 # reduced benchmark pass (the CI perf smoke; --full is the paper-scale run)
 bench-smoke:
 	$(PY) scripts/ci_lint.py --topology
+	$(PY) -m pytest -q -m slow tests/test_benchmarks_golden.py
 	PYTHONPATH=src $(PY) -m benchmarks.run --only fig7,fig8,tpu --policy app_aware
 	PYTHONPATH=src $(PY) -m benchmarks.interference_matrix --smoke \
 		--out BENCH_interference.json
 	PYTHONPATH=src $(PY) -m benchmarks.fault_matrix --smoke \
 		--out BENCH_faults.json
+	PYTHONPATH=src $(PY) -m benchmarks.notification_matrix --smoke \
+		--out BENCH_notifications.json
 
 # simulator phase-kernel perf trajectory: write + schema-check BENCH_sim.json
 bench-perf:
@@ -36,6 +50,13 @@ bench-interference:
 bench-faults:
 	PYTHONPATH=src $(PY) -m benchmarks.fault_matrix \
 		--out BENCH_faults.json
+	$(PY) scripts/ci_lint.py --bench
+
+# notification-channel four-way routing matrix: write + schema-check
+# BENCH_notifications.json (docs/policy_api.md)
+bench-notifications:
+	PYTHONPATH=src $(PY) -m benchmarks.notification_matrix \
+		--out BENCH_notifications.json
 	$(PY) scripts/ci_lint.py --bench
 
 lint:

@@ -61,4 +61,5 @@ MODE_LABEL = {RoutingMode.ADAPTIVE_0: "default",
               RoutingMode.ADAPTIVE_3: "highbias",
               "app_aware": "appaware",
               "eps_greedy": "epsgreedy",
+              "notification": "notify",
               "static": "staticpol"}

@@ -8,7 +8,8 @@ integrity + no stray __pycache__/*.pyc tracked in git.
 schema (docs/performance.md); BENCH_interference.json — when present —
 matches bench_interference/v1 or /v2 (docs/interference.md; v2 records
 the topology per cell); BENCH_faults.json — when present — matches
-bench_faults/v1 (docs/faults.md).
+bench_faults/v1 (docs/faults.md); BENCH_notifications.json — when
+present — matches bench_notifications/v1 (docs/policy_api.md).
 ``--topology`` mode (`make lint` / bench-smoke): instantiates every
 registered topology at small scale and runs the structural invariant
 battery headlessly (docs/topology.md), including the fault-mask checks
@@ -249,6 +250,68 @@ def lint_bench_faults_schema(require: bool = False) -> list:
     return bad
 
 
+#: BENCH_notifications.json contract (benchmarks/notification_matrix.py):
+#: top-level fields -> type, per-tenancy-cell and per-workload-arm
+#: numeric fields (docs/policy_api.md)
+_BENCH_NOTIF_SCHEMA_TOP = {"schema": str, "rounds": int, "seed": int,
+                           "topology": str, "notify_params": dict,
+                           "policies": list, "workloads": dict,
+                           "matrix": dict, "checks": dict}
+_BENCH_NOTIF_CELL_FIELDS = ("victim_slowdown", "victim_time_us",
+                            "victim_alone_us", "notification_events")
+
+
+def lint_bench_notifications_schema(require: bool = False) -> list:
+    """BENCH_notifications.json parses, matches bench_notifications/v1."""
+    path = ROOT / "BENCH_notifications.json"
+    if not path.exists():
+        return ["BENCH_notifications.json: missing "
+                "(run `make bench-notifications`)"] if require else []
+    try:
+        doc = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        return [f"BENCH_notifications.json: unparseable ({e})"]
+    bad = []
+    for key, typ in _BENCH_NOTIF_SCHEMA_TOP.items():
+        if key not in doc:
+            bad.append(f"BENCH_notifications.json: missing key {key!r}")
+        elif not isinstance(doc[key], typ):
+            bad.append(f"BENCH_notifications.json: {key!r} should be "
+                       f"{typ.__name__}")
+    if doc.get("schema") not in (None, "bench_notifications/v1"):
+        bad.append(f"BENCH_notifications.json: unknown schema "
+                   f"{doc.get('schema')!r}")
+    for mix, row in (doc.get("matrix") or {}).items():
+        for policy in (doc.get("policies") or list(row)):
+            cell = row.get(policy)
+            if not isinstance(cell, dict):
+                bad.append(f"BENCH_notifications.json: matrix.{mix} "
+                           f"missing policy {policy!r}")
+                continue
+            for f in _BENCH_NOTIF_CELL_FIELDS:
+                if not isinstance(cell.get(f), (int, float)):
+                    bad.append(f"BENCH_notifications.json: matrix.{mix}."
+                               f"{policy}.{f} missing or non-numeric")
+    for name, cell in (doc.get("workloads") or {}).items():
+        arms = cell.get("arms") if isinstance(cell, dict) else None
+        if not isinstance(arms, dict):
+            bad.append(f"BENCH_notifications.json: workloads.{name}.arms "
+                       f"should be a dict")
+            continue
+        for policy in (doc.get("policies") or list(arms)):
+            arm = arms.get(policy)
+            if not isinstance(arm, dict) \
+                    or not isinstance(arm.get("median_us"), (int, float)):
+                bad.append(f"BENCH_notifications.json: workloads.{name}."
+                           f"arms.{policy}.median_us missing or "
+                           f"non-numeric")
+    checks = doc.get("checks") or {}
+    if not isinstance(checks.get("wins_with_events_cells", []), list):
+        bad.append("BENCH_notifications.json: checks."
+                   "wins_with_events_cells should be a list")
+    return bad
+
+
 def lint_topology_invariants() -> list:
     """Every registered topology passes the invariant battery at its
     small scale (repro.dragonfly.invariants.check_all), plus the
@@ -314,12 +377,14 @@ def main(argv=None) -> int:
     elif args.bench:
         bad = (lint_bench_schema(require=True)
                + lint_bench_interference_schema()
-               + lint_bench_faults_schema())
+               + lint_bench_faults_schema()
+               + lint_bench_notifications_schema())
     elif args.docs:
         bad = (lint_docs_links() + lint_tracked_pycache()
                + lint_bare_jax_calls() + lint_bench_schema()
                + lint_bench_interference_schema()
-               + lint_bench_faults_schema())
+               + lint_bench_faults_schema()
+               + lint_bench_notifications_schema())
     else:
         bad = lint_style()
     print("\n".join(bad))

@@ -25,19 +25,26 @@ from typing import Protocol
 
 @dataclass
 class NICCounters:
-    """The four Aries NIC counters used by the paper (monotonic)."""
+    """The four Aries NIC counters used by the paper (monotonic), plus
+    the congestion-notification event counter of the notification
+    channel (SimParams.notify_*, docs/policy_api.md) — one event per
+    sent message whose bytes crossed a visibly-flagged link.  Like the
+    other four it is NIC-side and allocation-scoped: a job only ever
+    counts notifications its own traffic received (§3.2)."""
 
     request_flits: int = 0
     request_flits_stalled_cycles: int = 0
     request_packets: int = 0
     request_packets_cumulative_latency_us: float = 0.0
+    congestion_notifications: int = 0
 
     def observe(self, flits: int, stalled_cycles: int, packets: int,
-                latency_us_total: float) -> None:
+                latency_us_total: float, notifications: int = 0) -> None:
         self.request_flits += flits
         self.request_flits_stalled_cycles += stalled_cycles
         self.request_packets += packets
         self.request_packets_cumulative_latency_us += latency_us_total
+        self.congestion_notifications += notifications
 
     def snapshot(self) -> "NICCounters":
         return NICCounters(
@@ -45,6 +52,7 @@ class NICCounters:
             self.request_flits_stalled_cycles,
             self.request_packets,
             self.request_packets_cumulative_latency_us,
+            self.congestion_notifications,
         )
 
 
@@ -57,11 +65,18 @@ class CounterDelta:
     packets: int
     latency_us_total: float
     window_s: float  # wall-clock length of the observation window
+    notifications: int = 0  # congestion-notification events in the window
 
     @property
     def mean_latency_us(self) -> float:
         """L — average request->response latency (us)."""
         return self.latency_us_total / self.packets if self.packets else 0.0
+
+    @property
+    def notified_fraction(self) -> float:
+        """Fraction of the window's messages that saw a congestion
+        notification (the notification channel's per-window signal)."""
+        return self.notifications / self.packets if self.packets else 0.0
 
     @property
     def stalls_per_flit(self) -> float:
@@ -104,6 +119,8 @@ class CounterWindow:
             latency_us_total=(cur.request_packets_cumulative_latency_us
                               - self._last.request_packets_cumulative_latency_us),
             window_s=now - self._last_t,
+            notifications=(cur.congestion_notifications
+                           - self._last.congestion_notifications),
         )
         self._last, self._last_t = cur.snapshot(), now
         return delta

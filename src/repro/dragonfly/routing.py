@@ -115,6 +115,25 @@ def apply_bias(score: np.ndarray, is_nonmin: np.ndarray,
     return score
 
 
+def apply_notifications(est_queue_s: np.ndarray, notified: np.ndarray,
+                        penalty_s: float) -> np.ndarray:
+    """Demote links under a visible congestion notification.
+
+    The notification channel (SimParams.notify_*, docs/policy_api.md;
+    Rocher-Gonzalez et al. 2502.00616) marks links whose queue estimate
+    crossed the notify threshold on a past phase.  Routing reacts by
+    charging ``penalty_s`` seconds of predicted delay to every flagged
+    link, which flows into the hoisted score base exactly like queue
+    backlog — minimal candidates crossing a flagged link lose to clean
+    non-minimal ones once the penalty exceeds the mode's bias.
+
+    Returns a NEW array; the caller skips this call entirely when no
+    flag is visible, so the disabled channel stays bit-identical to the
+    notification-free scorer.
+    """
+    return est_queue_s + penalty_s * notified
+
+
 def score_candidates(link_ids: np.ndarray, est_queue_s: np.ndarray,
                      is_nonmin: np.ndarray, policy: RoutingPolicy,
                      modes: np.ndarray | None = None) -> np.ndarray:

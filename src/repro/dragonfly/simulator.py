@@ -57,7 +57,8 @@ from repro.core.counters import NICCounters
 from repro.core.perf_model import MAX_OUTSTANDING_PACKETS
 from repro.core.strategies import RoutingMode
 from repro.dragonfly.routing import (RoutingPolicy, apply_bias,
-                                     row_bias_terms, softmin_weights)
+                                     apply_notifications, row_bias_terms,
+                                     softmin_weights)
 from repro.dragonfly.topology import (PAD, Allocation, DragonflyTopology,
                                       Topology, make_topology)
 
@@ -132,8 +133,30 @@ class SimParams:
     #: under an active fault schedule — models the retransmit/timeout
     #: cost of losing all routes.  docs/faults.md.
     fault_penalty_us: float = 500.0
+    #: congestion-notification channel (docs/policy_api.md; Rocher-
+    #: Gonzalez et al. 2502.00616).  A link whose noisy queue estimate
+    #: `est_queue_s` crosses notify_threshold_s raises a flag that
+    #: becomes visible to source routers notify_delay_phases later
+    #: (propagation delay) and clears — hysteresis — only once the
+    #: estimate drops below notify_clear_frac * notify_threshold_s.
+    #: Visible flags charge notify_penalty_s of predicted delay to
+    #: every candidate crossing the link (routing.apply_notifications)
+    #: and surface per flow in FlowResult.notified / per allocation in
+    #: the NIC notification counter.  The default threshold (inf)
+    #: disables the channel: no flag ever raises, no extra RNG draws or
+    #: float ops happen, and the simulator is BIT-identical to the
+    #: notification-free fast path (tests/test_dragonfly_fastpath.py).
+    notify_threshold_s: float = float("inf")
+    notify_clear_frac: float = 0.5
+    notify_delay_phases: int = 1
+    notify_penalty_s: float = 300e-6
     #: accumulate per-stage wall times into sim.stage_time_s (perf_sim.py)
     profile_stages: bool = False
+
+    @property
+    def notify_enabled(self) -> bool:
+        """True when the notification channel can ever raise a flag."""
+        return bool(np.isfinite(self.notify_threshold_s))
 
 
 @dataclass
@@ -161,6 +184,11 @@ class FlowResult:
     #: zero surviving candidate paths this phase (charged the
     #: reroute-or-drop penalty); None when no fault was active
     stranded: np.ndarray | None = None
+    #: notification channel (SimParams.notify_*): float [n_app] in
+    #: [0, 1], the fraction of each app flow's sprayed bytes that
+    #: crossed a link under a VISIBLE congestion flag this phase; None
+    #: when the channel is disabled (threshold=inf, the default)
+    notified: np.ndarray | None = None
 
     @property
     def phase_time_us(self) -> float:
@@ -299,6 +327,16 @@ class DragonflySimulator:
         self.rng = np.random.default_rng(params.seed)
         self.link_queue_s = np.zeros(topo.n_links)  # seconds-to-drain units
         self.est_memory_s = np.zeros(topo.n_links)  # stale estimate memory
+        #: congestion-notification state (SimParams.notify_*): per-link
+        #: phase age of the active flag — -1 means no flag, and a flag
+        #: becomes visible to source routers once its age reaches
+        #: notify_delay_phases.  Lives alongside link_queue_s /
+        #: est_memory_s and follows the same lifecycle: cleared by
+        #: reset_queues() and by fault-epoch resets (dead links never
+        #: notify, docs/faults.md).
+        self.link_notify_age = np.full(topo.n_links, -1, dtype=np.int64)
+        self._notify_epoch = 0              # bumps when the visible set changes
+        self._notify_fault_epoch = 0        # last fault epoch seen by the channel
         self.counters: dict[str, NICCounters] = {}
         self.clock_s: float = 0.0
         self.total_flits_all_jobs: float = 0.0
@@ -330,6 +368,20 @@ class DragonflySimulator:
         """Fault epoch of the NEXT phase (keys the plan cache)."""
         return self.faults.epoch_at(self.phase_index) \
             if self.faults is not None else 0
+
+    def notify_epoch(self) -> int:
+        """Notification epoch: increments whenever the set of VISIBLE
+        congestion flags changes between phases (keys the plan cache —
+        a mirror of fault_epoch()).  Always 0 while the channel is
+        disabled."""
+        return self._notify_epoch
+
+    @property
+    def notified_links(self) -> np.ndarray:
+        """Bool [n_links]: flags visible to source routers on the NEXT
+        phase (raised at least notify_delay_phases ago, not yet
+        cleared by the hysteresis low-water mark)."""
+        return self.link_notify_age >= self.params.notify_delay_phases
 
     # --------------------------------------------------------- counter API
     def backend_for(self, allocation_id: str):
@@ -469,6 +521,11 @@ class DragonflySimulator:
         h = hashlib.sha1()
         h.update(self.topo.spec_str().encode())
         h.update(str(self.fault_epoch()).encode())
+        # notification epoch: the key is a superset of everything
+        # run_phase reads, so a reactive arm never replays a plan keyed
+        # to a different visible-flag set (cheap insurance mirroring the
+        # fault epoch — always 0, hence free, while the channel is off)
+        h.update(str(self._notify_epoch).encode())
         for a in (src, dst, size):
             h.update(a.tobytes())
         key = h.digest()
@@ -516,11 +573,26 @@ class DragonflySimulator:
         # and the phase is bit-identical to a fault-free simulator.
         fstate = self.faults.state_at(self.phase_index) \
             if self.faults is not None else None
+        if self.faults is not None:
+            ep = self.faults.epoch_at(self.phase_index)
+            if ep != self._notify_fault_epoch:
+                # fault-epoch reset: the link set just changed, so flags
+                # raised on the OLD machine describe paths that no
+                # longer exist — the whole channel restarts (mirror of
+                # the PR-4 est_memory_s reset contract)
+                self._notify_fault_epoch = ep
+                if (self.link_notify_age >= 0).any():
+                    if self.notified_links.any():
+                        self._notify_epoch += 1
+                    self.link_notify_age[:] = -1
         self.phase_index += 1
         if fstate is not None and fstate.any_dead:
             # a downed link holds no backlog and leaves no stale estimate
             self.link_queue_s[fstate.dead] = 0.0
             self.est_memory_s[fstate.dead] = 0.0
+            # ... and never notifies: an active flag dies with its link
+            # instead of demoting paths the mask already removed
+            self.link_notify_age[fstate.dead] = -1
 
         # --- app flows: from the plan, or validated + subsampled fresh ----
         if plan is not None:
@@ -645,6 +717,27 @@ class DragonflySimulator:
         est_queue_s = ((1.0 - a) * self.link_queue_s
                        + a * self.est_memory_s) * noise + ghosts
 
+        # --- congestion notifications (SimParams.notify_*) -----------------
+        # Flags raised on a past phase become visible after the propagation
+        # delay and demote every candidate crossing them via the
+        # routing-layer penalty (folded into the estimate BEFORE the
+        # hoisted score base, so the base gather, the feedback re-gathers
+        # and both backends see one consistent per-link cost).  The raw
+        # estimate is kept for the end-of-phase raise/clear update: the
+        # penalty must not feed back into the hysteresis comparison or a
+        # flagged link could never clear.  Disabled (threshold=inf) this
+        # block is skipped entirely — no RNG draws, no float ops — keeping
+        # the phase bit-identical to the notification-free simulator.
+        notify_vis = est_notify = None
+        if p.notify_enabled:
+            est_notify = est_queue_s
+            notify_vis = self.link_notify_age >= p.notify_delay_phases
+            if fstate is not None and fstate.any_dead:
+                notify_vis &= ~fstate.dead      # dead links never notify
+            if notify_vis.any():
+                est_queue_s = apply_notifications(
+                    est_queue_s, notify_vis, p.notify_penalty_s)
+
         # --- contention window: the APP phase's clean serialization time ---
         # (stall-free flit serialization of the largest app message; floored
         # so transient small messages do not self-congest)
@@ -713,6 +806,17 @@ class DragonflySimulator:
             window_s=window_s,
             **({} if cand_mask is None else {"cand_mask": cand_mask}))
         w_app = w[:n_app]
+        # per-flow notified exposure: the fraction of each app flow's
+        # sprayed bytes that crossed a visibly-flagged link (all zero on
+        # quiet phases so reactive policies can tell "enabled, calm"
+        # from "disabled"=None)
+        flow_notified = None
+        if notify_vis is not None:
+            flow_notified = np.zeros(n_app)
+            if n_app and notify_vis.any():
+                cand_flag = (notify_vis[safe[:n_app]]
+                             & valid[:n_app]).any(axis=-1)
+                flow_notified = (cand_flag * np.asarray(w_app)).sum(axis=-1)
         if prof:
             t0 = self._stage("fixed_point", t0)
 
@@ -743,9 +847,34 @@ class DragonflySimulator:
         self.link_queue_s = self.link_queue_s * p.queue_carryover + excess_s
         self.clock_s += duration_s
 
+        # --- notification raise / age / clear (threshold + hysteresis) -----
+        # Driven by the RAW estimate (est_notify, penalty-free): a link
+        # raises at the threshold high-water mark, an active flag ages one
+        # phase at a time toward visibility, and it clears only once the
+        # estimate drops below the notify_clear_frac low-water mark — the
+        # two-level hysteresis of 2502.00616 that keeps flags from
+        # chattering around a single threshold.
+        if notify_vis is not None:
+            age = self.link_notify_age
+            raised = est_notify >= p.notify_threshold_s
+            if fstate is not None and fstate.any_dead:
+                raised &= ~fstate.dead          # dead links never notify
+            low = est_notify < p.notify_clear_frac * p.notify_threshold_s
+            active = age >= 0
+            age[active & low & ~raised] = -1    # hysteresis clear
+            age[active & (raised | ~low)] += 1  # surviving flags age
+            age[~active & raised] = 0           # fresh flags start hidden
+            if not np.array_equal(self.notified_links, notify_vis):
+                self._notify_epoch += 1         # visible set changed
+
         # --- NIC counters (§2.3): one allocation, or per tenant segment ----
         app_flits, app_packets = flits[:n_app], packets[:n_app]
         app_lat, app_stalls = lat_us[:n_app], s_flit[:n_app]
+        # NIC-visible notification events: app flows whose sprayed bytes
+        # touched a flagged link (allocation-scoped like every other
+        # counter — §3.2: users cannot see other jobs' notifications)
+        notif_flows = (flow_notified > 0.0) if flow_notified is not None \
+            else None
         # counter_dropout fault: the allocation's NIC telemetry goes dark —
         # no observe(), so readers see a frozen snapshot and the
         # PolicyEngine staleness guard (docs/faults.md) eventually trips
@@ -768,6 +897,8 @@ class DragonflySimulator:
                     packets=int(app_packets[mk].sum()),
                     latency_us_total=float((app_lat[mk]
                                             * app_packets[mk]).sum()),
+                    notifications=int(notif_flows[mk].sum())
+                    if notif_flows is not None else 0,
                 )
         elif allocation is not None and not _dark(allocation.allocation_id):
             c = self.counters.setdefault(allocation.allocation_id,
@@ -777,6 +908,8 @@ class DragonflySimulator:
                 stalled_cycles=int((app_flits * app_stalls).sum()),
                 packets=int(app_packets.sum()),
                 latency_us_total=float((app_lat * app_packets).sum()),
+                notifications=int(notif_flows.sum())
+                if notif_flows is not None else 0,
             )
 
         nonmin_bytes = float(
@@ -820,6 +953,7 @@ class DragonflySimulator:
             link_load_q=np.asarray(load_q) if tenants is not None else None,
             tenant_nonmin_fraction=t_nonmin,
             stranded=stranded[:n_app] if stranded is not None else None,
+            notified=flow_notified,
         )
 
     # ----------------------------------------------------- numpy fixed point
@@ -970,5 +1104,13 @@ class DragonflySimulator:
         reproduce that legacy partial reset.  Per-allocation NIC counters
         are already isolated per allocation_id and never leak."""
         self.link_queue_s[:] = 0.0
+        # notification flags are congestion state like the queues that
+        # raised them: an isolated experiment must not inherit a previous
+        # scenario's visible flags (the same leak class as the PR-4
+        # est_memory_s bug — regression-pinned in tests/test_notifications)
+        if (self.link_notify_age >= 0).any():
+            if self.notified_links.any():
+                self._notify_epoch += 1
+            self.link_notify_age[:] = -1
         if include_estimates:
             self.est_memory_s[:] = 0.0

@@ -284,13 +284,16 @@ def run_iteration_engine(sim: DragonflySimulator, alloc: Allocation,
         # post-send counter read (never delays the message itself)
         if res.t_us.size == len(batch):
             engine.bus.publish_flow_arrays(res.latency_us,
-                                           res.stalls_per_flit)
+                                           res.stalls_per_flit,
+                                           notified=res.notified)
         elif res.t_us.size:
             # the simulator statistically subsampled the phase: publish
             # the phase-mean sample (engine broadcasts it over the batch)
             engine.bus.publish_flow_arrays(
                 [float(res.latency_us.mean())],
-                [float(res.stalls_per_flit.mean())])
+                [float(res.stalls_per_flit.mean())],
+                notified=None if res.notified is None
+                else [float(res.notified.mean())])
         host = sim.params.host_overhead_us * sim.rng.lognormal(
             0.0, sim.params.host_noise_sigma) + counter_read_overhead_us
         total_us += res.phase_time_us + host

@@ -17,8 +17,10 @@ from the deprecated `repro.core.app_aware.AppAwareRouter` shim.
 from repro.policy.app_aware import (AppAwareConfig, AppAwarePolicy,
                                     SiteState, scoped_site_filter)
 from repro.policy.engine import PolicyEngine, POLICY_NAMES, make_engine
+from repro.policy.notification import NotificationConfig, NotificationPolicy
 from repro.policy.policies import EpsilonGreedyPolicy, StaticPolicy
-from repro.policy.telemetry import TelemetryBus
+from repro.policy.telemetry import (COUNTER_KINDS, TelemetryBus,
+                                    normalize_kind)
 from repro.policy.types import (DecisionBatch, Feedback, KIND_ALLREDUCE,
                                 KIND_ALLTOALL, KIND_BROADCAST, KIND_PT2PT,
                                 Policy, TrafficLedger)
@@ -27,7 +29,8 @@ __all__ = [
     "AppAwareConfig", "AppAwarePolicy", "SiteState", "scoped_site_filter",
     "PolicyEngine", "POLICY_NAMES", "make_engine",
     "EpsilonGreedyPolicy", "StaticPolicy",
-    "TelemetryBus",
+    "NotificationConfig", "NotificationPolicy",
+    "TelemetryBus", "COUNTER_KINDS", "normalize_kind",
     "DecisionBatch", "Feedback", "Policy", "TrafficLedger",
     "KIND_PT2PT", "KIND_ALLTOALL", "KIND_ALLREDUCE", "KIND_BROADCAST",
 ]

@@ -21,12 +21,13 @@ import numpy as np
 
 from repro.core.strategies import RoutingMode
 from repro.policy.app_aware import AppAwareConfig, AppAwarePolicy
+from repro.policy.notification import NotificationConfig, NotificationPolicy
 from repro.policy.policies import EpsilonGreedyPolicy, StaticPolicy
 from repro.policy.telemetry import TelemetryBus
 from repro.policy.types import (DecisionBatch, Feedback, Policy,
                                 TrafficLedger)
 
-POLICY_NAMES = ("static", "app_aware", "eps_greedy")
+POLICY_NAMES = ("static", "app_aware", "eps_greedy", "notification")
 
 
 class PolicyEngine:
@@ -100,11 +101,14 @@ class PolicyEngine:
             return
         if len(feedback) == 1 and len(b) > 1:
             # one aggregate sample for the whole batch (counter-window
-            # reads): broadcast it over the rows
+            # reads): broadcast it over the rows — the notification
+            # signal rides along, None stays None (no signal != calm)
             feedback = Feedback.of(
                 np.full(len(b), float(feedback.latency_cycles[0])),
                 np.full(len(b), float(feedback.stalls_per_flit[0])),
-                source=feedback.source)
+                source=feedback.source,
+                notified=None if feedback.notified is None
+                else np.full(len(b), float(feedback.notified[0])))
         self.policy.update(b, feedback)
 
     def _on_feedback(self, feedback: Feedback) -> None:
@@ -149,9 +153,13 @@ def make_engine(name: str, *,
                 fallback_mode: Hashable = None) -> PolicyEngine:
     """Factory mapping CLI names to engines.
 
-    "static"     -> StaticPolicy(static_mode or mode_a)
-    "app_aware"  -> AppAwarePolicy (Algorithm 1)
-    "eps_greedy" -> EpsilonGreedyPolicy over (mode_a, mode_b)
+    "static"       -> StaticPolicy(static_mode or mode_a)
+    "app_aware"    -> AppAwarePolicy (Algorithm 1)
+    "eps_greedy"   -> EpsilonGreedyPolicy over (mode_a, mode_b)
+    "notification" -> NotificationPolicy: calm regime = mode_b (the
+                      minimal arm), congested regime = mode_a (the
+                      spreading arm), switched by the congestion-
+                      notification signal (docs/policy_api.md)
 
     ``staleness_limit``/``fallback_mode`` arm the engine's bounded-
     staleness guard (docs/faults.md).
@@ -175,6 +183,9 @@ def make_engine(name: str, *,
             mode_a=mode_a, mode_b=mode_b,
             mode_a_alltoall=mode_a_alltoall, epsilon=epsilon,
             epsilon_decay=epsilon_decay, seed=seed)
+    elif name == "notification":
+        policy = NotificationPolicy(NotificationConfig(
+            mode_calm=mode_b, mode_congested=mode_a))
     else:
         raise ValueError(
             f"unknown policy {name!r}; expected one of {POLICY_NAMES}")

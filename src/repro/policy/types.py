@@ -125,13 +125,20 @@ class Feedback:
     stalls_per_flit: [n] — mean stall cycles s per ready flit.
     weight:          [n] — optional averaging weight (bytes); used when a
                      policy aggregates rows of one phase into one sample.
-    source: provenance tag ("nic" | "hlo" | "sim" | "model").
+    source: provenance tag, canonicalized by telemetry.normalize_kind
+            ("nic" | "hlo" | "sim" | "model" | "notify").
+    notified: [n] — optional congestion-notification exposure per row in
+            [0, 1] (fraction of the row's bytes that crossed a link
+            under a visible congestion flag; SimParams.notify_*).  None
+            when the producer has no notification channel — consumers
+            must treat None as "no signal", not "no congestion".
     """
 
     latency_cycles: np.ndarray
     stalls_per_flit: np.ndarray
     weight: np.ndarray = None
     source: str = "sim"
+    notified: np.ndarray = None
 
     def __post_init__(self):
         n = self.latency_cycles.shape[0]
@@ -141,15 +148,19 @@ class Feedback:
             object.__setattr__(self, "weight", np.ones(n))
         elif self.weight.shape != (n,):
             raise ValueError("Feedback weight must have shape [n]")
+        if self.notified is not None and self.notified.shape != (n,):
+            raise ValueError("Feedback notified must have shape [n]")
 
     @staticmethod
     def of(latency_cycles, stalls_per_flit, weight=None,
-           source: str = "sim") -> "Feedback":
+           source: str = "sim", notified=None) -> "Feedback":
         l = np.atleast_1d(np.asarray(latency_cycles, dtype=np.float64))
         s = np.atleast_1d(np.asarray(stalls_per_flit, dtype=np.float64))
         w = None if weight is None else \
             np.atleast_1d(np.asarray(weight, dtype=np.float64))
-        return Feedback(l, s, w, source)
+        nf = None if notified is None else \
+            np.atleast_1d(np.asarray(notified, dtype=np.float64))
+        return Feedback(l, s, w, source, nf)
 
     @staticmethod
     def single(latency_cycles: float, stalls_per_flit: float,

@@ -210,14 +210,20 @@ class InterferenceEngine:
                 rows = res.tenant_slice(k)
                 if w.is_engine_arm and rows.size:
                     # post-send counter read feeding THIS tenant's engine
+                    # (notified exposure sliced per tenant like (L, s):
+                    # no cross-tenant leakage through the new counter)
+                    nf = res.notified
                     if rows.size == counts[k]:
                         engines[k].bus.publish_flow_arrays(
-                            res.latency_us[rows], res.stalls_per_flit[rows])
+                            res.latency_us[rows], res.stalls_per_flit[rows],
+                            notified=None if nf is None else nf[rows])
                     else:
                         # statistically subsampled: phase-mean sample
                         engines[k].bus.publish_flow_arrays(
                             [float(res.latency_us[rows].mean())],
-                            [float(res.stalls_per_flit[rows].mean())])
+                            [float(res.stalls_per_flit[rows].mean())],
+                            notified=None if nf is None
+                            else [float(nf[rows].mean())])
                 host = p.host_overhead_us * sim.rng.lognormal(
                     0.0, p.host_noise_sigma)
                 if w.is_engine_arm:

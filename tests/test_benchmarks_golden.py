@@ -1,0 +1,90 @@
+"""Golden seed-regression pins for the benchmark surface.
+
+Each test runs a fig7/fig8/fig10 benchmark at small scale with a fixed
+seed and compares a sha256 digest of the full (canonicalized) result
+structure against a pinned value.  Any change to the simulator's RNG
+stream, float pipeline, routing scores, or the benchmarks' own
+protocol shows up as a digest flip — the point: refactors must either
+be bit-identical or consciously re-pin (and say why in the PR).
+
+Marked ``slow``: excluded from the tier-1 `pytest -x -q` pass (pyproject
+addopts) and run by `make bench-smoke` instead — see docs/testing.md.
+"""
+
+import hashlib
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import fig7_routing_pingpong as fig7  # noqa: E402
+from benchmarks import fig8_microbench as fig8        # noqa: E402
+from benchmarks import fig10_applications as fig10    # noqa: E402
+from repro.dragonfly import make_topology             # noqa: E402
+
+pytestmark = pytest.mark.slow
+
+#: the small machine every golden pin runs on (1/3 the paper's groups)
+SMALL = "aries:n_groups=4,chassis_per_group=2,blades_per_chassis=4"
+
+
+def _canon(obj):
+    """Canonical, json-able mirror of a benchmark result structure."""
+    if isinstance(obj, dict):
+        return {str(k): _canon(obj[k])
+                for k in sorted(obj, key=str)}
+    if isinstance(obj, (list, tuple)):
+        return [_canon(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return [_canon(v) for v in obj.tolist()]
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    return obj
+
+
+def _digest(obj) -> str:
+    blob = json.dumps(_canon(obj), sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def test_fig7_pingpong_golden():
+    res = fig7.run(iters=2, seeds=1, topology=SMALL)
+    assert _digest(res) == "54f968d4db46a28d"
+
+
+def test_fig8_microbench_golden(monkeypatch):
+    # two representative sweep rows keep the pin fast; the full sweep
+    # shares the exact same code path
+    monkeypatch.setattr(fig8, "SWEEP", {
+        "alltoall": [dict(size_per_pair=1024)],
+        "halo3d": [dict(nx=256)],
+    })
+    res = fig8.run(machine="cori", iters=2, seed=0, full_scale=False,
+                   policy="app_aware", topology=SMALL)
+    assert _digest(res) == "698e18f146f8dd7b"
+
+
+def test_fig10_application_golden():
+    topo = make_topology(SMALL)
+    res = fig10.run_app(topo, "bfs", "alltoall",
+                        dict(size_per_pair=2048), 64, 0.5, iters=2,
+                        seed=0, policy="app_aware")
+    assert _digest(res) == "8a9ac248b52532ba"
+
+
+def test_golden_digests_are_reproducible():
+    """The pin mechanism itself: two identical runs digest identically
+    (catches any un-seeded randomness creeping into the protocol)."""
+    topo = make_topology(SMALL)
+    a = fig10.run_app(topo, "bfs", "alltoall", dict(size_per_pair=2048),
+                      64, 0.5, iters=1, seed=3)
+    topo = make_topology(SMALL)
+    b = fig10.run_app(topo, "bfs", "alltoall", dict(size_per_pair=2048),
+                      64, 0.5, iters=1, seed=3)
+    assert _digest(a) == _digest(b)

@@ -1,7 +1,10 @@
 """PR-3 fast-path guarantees: golden traces vs the pre-refactor oracle,
-PhasePlan reuse, the jax backend tolerance matrix, and the background-
-flow disjointness regression."""
+PhasePlan reuse, the jax backend tolerance matrix, the background-flow
+disjointness regression, and the notification-channel OFF-switch
+differential (threshold=inf replays the channel-free simulator
+bit-for-bit across the whole topology family)."""
 
+import hashlib
 import warnings
 
 import numpy as np
@@ -9,10 +12,13 @@ import pytest
 
 from repro.core.strategies import RoutingMode
 from repro.dragonfly import (DragonflySimulator, DragonflyTopology,
-                             SimParams, TopologyParams)
+                             SimParams, TenantSegments, TopologyParams)
 from repro.dragonfly.reference import reference_run_phase
 from repro.dragonfly.routing import RoutingPolicy, spray_weights
-from repro.dragonfly.topology import make_allocation
+from repro.dragonfly.topology import (make_allocation,
+                                      registered_topologies,
+                                      small_topology)
+from repro.faults import FaultSchedule, link_down, router_down
 
 TOPO = DragonflyTopology(TopologyParams(n_groups=4, chassis_per_group=2,
                                         blades_per_chassis=4))
@@ -276,6 +282,115 @@ def test_jax_backend_falls_back_cleanly(monkeypatch):
 def test_unknown_backend_rejected():
     with pytest.raises(ValueError):
         DragonflySimulator(TOPO, SimParams(backend="cuda"))
+
+
+# --------------------------------------------------------------------------
+# Notification-channel OFF switch: notify_threshold_s=inf (the default)
+# must be indistinguishable from a simulator without the channel — same
+# RNG stream, same float ops, bit-identical results — no matter how the
+# other notify knobs are set, on every registered topology, with mixed
+# per-flow modes, tenants, and an active fault schedule.
+# --------------------------------------------------------------------------
+#: aggressively non-default channel knobs that must all be inert at inf
+_NOTIFY_OFF = dict(notify_threshold_s=float("inf"), notify_clear_frac=0.9,
+                   notify_delay_phases=0, notify_penalty_s=1.0)
+
+
+def _digest(a) -> str:
+    return hashlib.sha256(np.ascontiguousarray(a).tobytes()) \
+        .hexdigest()[:16]
+
+
+def _trace(sim, src, dst, size, pol, alloc=None, tenants=None,
+           modes=None, phases=3):
+    out = []
+    for _ in range(phases):
+        res = sim.run_phase(src, dst, size, pol, alloc, tenants=tenants,
+                            modes=modes)
+        assert res.notified is None          # disabled = no signal at all
+        out.append((_digest(res.t_us), _digest(res.latency_us),
+                    _digest(res.stalls_per_flit),
+                    _digest(sim.link_queue_s),
+                    _digest(sim.est_memory_s)))
+    return out
+
+
+def _family_flows(topo, seed=3, n=64):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, topo.n_nodes, size=n)
+    dst = (src + rng.integers(1, topo.n_nodes, size=n)) % topo.n_nodes
+    size = rng.pareto(1.2, size=n) * 65536 + 1024
+    return src, dst, size
+
+
+@pytest.mark.parametrize("name", registered_topologies())
+@pytest.mark.parametrize("mode", [RoutingMode.ADAPTIVE_0,
+                                  RoutingMode.ADAPTIVE_3])
+def test_notify_off_bit_identical_topology_family(name, mode):
+    topo = small_topology(name)
+    src, dst, size = _family_flows(topo)
+    pol = RoutingPolicy(mode)
+    base = DragonflySimulator(topo, SimParams(seed=13))
+    off = DragonflySimulator(topo, SimParams(seed=13, **_NOTIFY_OFF))
+    assert not off.params.notify_enabled
+    assert _trace(base, src, dst, size, pol) \
+        == _trace(off, src, dst, size, pol)
+    assert base.clock_s == off.clock_s
+    assert off.notify_epoch() == 0
+
+
+def test_notify_off_bit_identical_mixed_modes_and_allocation():
+    src, dst, size = _flows(seed=17)
+    pool = [RoutingMode.ADAPTIVE_0, RoutingMode.ADAPTIVE_1,
+            RoutingMode.ADAPTIVE_3, RoutingMode.MIN_HASH]
+    modes = np.empty(N, dtype=object)
+    modes[:] = [pool[i % len(pool)] for i in range(N)]
+    al = make_allocation(TOPO, 8, spread="inter_groups", seed=5)
+    pol = RoutingPolicy(RoutingMode.ADAPTIVE_0)
+    base = DragonflySimulator(TOPO, SimParams(seed=19))
+    off = DragonflySimulator(TOPO, SimParams(seed=19, **_NOTIFY_OFF))
+    assert _trace(base, src, dst, size, pol, alloc=al, modes=modes) \
+        == _trace(off, src, dst, size, pol, alloc=al, modes=modes)
+    ca, cb = base.counters[al.allocation_id], off.counters[al.allocation_id]
+    assert ca.request_flits == cb.request_flits
+    assert ca.congestion_notifications == cb.congestion_notifications == 0
+
+
+def test_notify_off_bit_identical_tenants():
+    src, dst, size = _flows(seed=23, n=200)
+    al1 = make_allocation(TOPO, 8, spread="contiguous", seed=2,
+                          allocation_id="a")
+    al2 = make_allocation(TOPO, 8, spread="contiguous", seed=9,
+                          allocation_id="b")
+    seg = TenantSegments.of([al1, al2], [100, 100])
+    pol = RoutingPolicy(RoutingMode.ADAPTIVE_0)
+    base = DragonflySimulator(TOPO, SimParams(seed=29))
+    off = DragonflySimulator(TOPO, SimParams(seed=29, **_NOTIFY_OFF))
+    assert _trace(base, src, dst, size, pol, tenants=seg) \
+        == _trace(off, src, dst, size, pol, tenants=seg)
+    for aid in ("a", "b"):
+        assert base.counters[aid].request_packets \
+            == off.counters[aid].request_packets
+        assert off.counters[aid].congestion_notifications == 0
+
+
+@pytest.mark.parametrize("name", registered_topologies())
+def test_notify_off_bit_identical_under_faults(name):
+    topo = small_topology(name)
+    src, dst, size = _family_flows(topo, seed=7)
+    sched = FaultSchedule.of(
+        link_down(start=1, end=3, n_random=2, link_kind="global", seed=4),
+        router_down(start=2, end=3, n_random=1, seed=6))
+    pol = RoutingPolicy(RoutingMode.ADAPTIVE_0)
+    base = DragonflySimulator(topo, SimParams(seed=31, bg_enable=False),
+                              faults=sched)
+    off = DragonflySimulator(
+        topo, SimParams(seed=31, bg_enable=False, **_NOTIFY_OFF),
+        faults=sched)
+    assert _trace(base, src, dst, size, pol, phases=4) \
+        == _trace(off, src, dst, size, pol, phases=4)
+    assert base.fault_epoch() == off.fault_epoch()
+    assert off.notify_epoch() == 0
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,303 @@
+"""Congestion-notification channel: flag lifecycle (raise / delay /
+hysteresis / clear), reset and fault-epoch hygiene, plan-cache keying,
+counter crediting, and the NotificationPolicy regime automaton."""
+
+import numpy as np
+import pytest
+
+from repro.core.counters import CounterDelta
+from repro.core.strategies import RoutingMode
+from repro.dragonfly import (DragonflySimulator, DragonflyTopology,
+                             SimParams, TopologyParams)
+from repro.dragonfly.routing import RoutingPolicy, apply_notifications
+from repro.dragonfly.topology import make_allocation
+from repro.faults import FaultSchedule, link_down
+from repro.policy import (DecisionBatch, Feedback, NotificationConfig,
+                          NotificationPolicy, POLICY_NAMES, make_engine)
+
+TOPO = DragonflyTopology(TopologyParams(n_groups=4, chassis_per_group=2,
+                                        blades_per_chassis=4))
+POL = RoutingPolicy(RoutingMode.ADAPTIVE_0)
+
+#: noise-free estimates: est_queue_s == the value we write into
+#: link_queue_s / est_memory_s, so threshold crossings are exact
+QUIET = dict(bg_enable=False, phantom_sigma=0.0, phantom_ghost_s=0.0)
+THR = 1e-3
+
+
+def _sim(**kw):
+    p = dict(seed=0, notify_threshold_s=THR, **QUIET)
+    p.update(kw)
+    return DragonflySimulator(TOPO, SimParams(**p))
+
+
+def _set_est(sim, value):
+    """Pin the next phase's noise-free estimate to `value` exactly."""
+    sim.link_queue_s[:] = value
+    sim.est_memory_s[:] = value
+
+
+def _phase(sim, n=8, seed=3, alloc=None):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, TOPO.n_nodes, size=n)
+    dst = (src + rng.integers(1, TOPO.n_nodes, size=n)) % TOPO.n_nodes
+    return sim.run_phase(src, dst, np.full(n, 4096.0), POL, alloc)
+
+
+# --------------------------------------------------------------------------
+# Channel lifecycle.
+# --------------------------------------------------------------------------
+def test_disabled_by_default():
+    sim = DragonflySimulator(TOPO, SimParams(seed=0, bg_enable=False))
+    assert not sim.params.notify_enabled
+    res = _phase(sim, n=8)
+    assert res.notified is None                  # no signal, not "calm"
+    assert (sim.link_notify_age == -1).all()
+    assert sim.notify_epoch() == 0
+
+
+def test_raise_propagation_delay_then_visible():
+    sim = _sim(notify_delay_phases=1)
+    _set_est(sim, 2 * THR)
+    r1 = _phase(sim, n=8)
+    # raised at END of phase 1 (age 0) -> not yet visible during it
+    assert r1.notified is not None and not r1.notified.any()
+    assert (sim.link_notify_age == 0).all()
+    assert not sim.notified_links.any()
+    _set_est(sim, 2 * THR)
+    r2 = _phase(sim, n=8)                        # age 0 < delay: still dark
+    assert not r2.notified.any()
+    assert sim.notified_links.all()              # aged past the delay now
+    _set_est(sim, 2 * THR)
+    r3 = _phase(sim, n=8)                        # flags visible this phase
+    assert (r3.notified > 0.0).any()
+    assert r3.notified.max() <= 1.0 + 1e-12
+
+
+def test_two_level_hysteresis():
+    sim = _sim()
+    for _ in range(2):                           # raise + age to visible
+        _set_est(sim, 2 * THR)
+        _phase(sim)
+    assert sim.notified_links.all()
+    # mid band [clear_frac*thr, thr): below raise, above clear -> held
+    _set_est(sim, 0.7 * THR)
+    _phase(sim)
+    assert sim.notified_links.all()
+    # below the low-water mark -> cleared in one phase
+    _set_est(sim, 0.4 * THR)
+    _phase(sim)
+    assert (sim.link_notify_age == -1).all()
+    assert not sim.notified_links.any()
+
+
+def test_notify_epoch_tracks_visible_set_changes():
+    sim = _sim()
+    e0 = sim.notify_epoch()
+    _set_est(sim, 2 * THR)
+    _phase(sim)                                  # raised, not visible yet
+    assert sim.notify_epoch() == e0
+    _set_est(sim, 2 * THR)
+    _phase(sim)                                  # became visible
+    e1 = sim.notify_epoch()
+    assert e1 > e0
+    _set_est(sim, 2 * THR)
+    _phase(sim)                                  # same visible set: stable
+    assert sim.notify_epoch() == e1
+    _set_est(sim, 0.0)
+    _phase(sim)                                  # set cleared: bumps again
+    assert sim.notify_epoch() > e1
+
+
+def test_plan_cache_keyed_on_notify_epoch():
+    sim = _sim()
+    rng = np.random.default_rng(1)
+    src = rng.integers(0, TOPO.n_nodes, size=32)
+    dst = (src + 1) % TOPO.n_nodes
+    size = np.full(32, 2048.0)
+    plan = sim.plan_for(src, dst, size)
+    assert sim.plan_for(src, dst, size) is plan
+    for _ in range(2):                           # flip the visible set
+        _set_est(sim, 2 * THR)
+        _phase(sim)
+    assert sim.plan_for(src, dst, size) is not plan
+
+
+# --------------------------------------------------------------------------
+# Hygiene: reset_queues, fault epochs, dead links.
+# --------------------------------------------------------------------------
+def test_reset_queues_clears_notification_state():
+    """Regression mirror of the PR-4 est_memory_s leak: a tenant swap
+    must not inherit the previous tenant's congestion flags — even the
+    legacy partial reset clears them (flags ARE queue state)."""
+    for kw in (dict(include_estimates=False), dict()):
+        sim = _sim()
+        for _ in range(2):
+            _set_est(sim, 2 * THR)
+            _phase(sim)
+        assert sim.notified_links.any()
+        e = sim.notify_epoch()
+        sim.reset_queues(**kw)
+        assert (sim.link_notify_age == -1).all()
+        assert sim.notify_epoch() > e            # consumers must replan
+
+
+def test_dead_links_never_notify():
+    lo, hi = TOPO.link_ranges()["global"]
+    dead = [lo, lo + 1]
+    sched = FaultSchedule.of(link_down(dead))
+    sim = DragonflySimulator(
+        TOPO, SimParams(seed=0, notify_threshold_s=THR, **QUIET),
+        faults=sched)
+    for _ in range(3):
+        _set_est(sim, 2 * THR)
+        _phase(sim)
+    assert (sim.link_notify_age[dead] == -1).all()
+    assert not sim.notified_links[dead].any()
+    alive = np.ones(TOPO.n_links, dtype=bool)
+    alive[dead] = False
+    assert sim.notified_links[alive].all()
+
+
+def test_fault_epoch_transition_clears_flags():
+    """Flags raised on the pre-fault link set are stale the moment the
+    machine changes: the transition wipes the channel."""
+    sched = FaultSchedule.of(link_down(n_random=2, link_kind="global",
+                                       start=2, seed=5))
+    sim = DragonflySimulator(
+        TOPO, SimParams(seed=0, notify_threshold_s=THR, **QUIET),
+        faults=sched)
+    for _ in range(2):                           # phases 0-1: healthy, raise
+        _set_est(sim, 2 * THR)
+        _phase(sim)
+    assert sim.notified_links.any()
+    e = sim.notify_epoch()
+    _set_est(sim, 0.0)
+    _phase(sim)                                  # phase 2: epoch flips
+    # wiped at the transition; est stayed low so nothing re-raised
+    assert (sim.link_notify_age == -1).all()
+    assert sim.notify_epoch() > e
+
+
+# --------------------------------------------------------------------------
+# Counters: allocation-scoped crediting (§3.2).
+# --------------------------------------------------------------------------
+def test_notification_counter_credits_exposed_flows():
+    sim = _sim()
+    al = make_allocation(TOPO, 8, spread="inter_groups", seed=3)
+    for _ in range(2):
+        _set_est(sim, 2 * THR)
+        _phase(sim, n=16, alloc=al)
+    _set_est(sim, 2 * THR)
+    res = _phase(sim, n=16, alloc=al)            # visible flags this phase
+    exposed = int((res.notified > 0.0).sum())
+    assert exposed > 0
+    nic = sim.counters[al.allocation_id]
+    assert nic.congestion_notifications == exposed
+    delta = CounterDelta(flits=nic.request_flits, stalled_cycles=0,
+                         packets=nic.request_packets, latency_us_total=0.0,
+                         window_s=1.0,
+                         notifications=nic.congestion_notifications)
+    assert 0.0 < delta.notified_fraction <= 1.0
+
+
+def test_disabled_channel_counts_nothing():
+    sim = DragonflySimulator(TOPO, SimParams(seed=0, bg_enable=False))
+    al = make_allocation(TOPO, 8, spread="inter_groups", seed=3)
+    _phase(sim, n=16, alloc=al)
+    assert sim.counters[al.allocation_id].congestion_notifications == 0
+
+
+# --------------------------------------------------------------------------
+# Routing helper.
+# --------------------------------------------------------------------------
+def test_apply_notifications_pure_and_additive():
+    est = np.array([1e-6, 2e-6, 3e-6])
+    vis = np.array([True, False, True])
+    out = apply_notifications(est, vis, 300e-6)
+    assert out is not est                        # caller's array untouched
+    np.testing.assert_allclose(out, [301e-6, 2e-6, 303e-6])
+    np.testing.assert_allclose(est, [1e-6, 2e-6, 3e-6])
+
+
+# --------------------------------------------------------------------------
+# NotificationPolicy regime automaton.
+# --------------------------------------------------------------------------
+def _fb(exposure, n=4):
+    return Feedback.of(np.full(n, 100.0), np.zeros(n),
+                       notified=np.full(n, float(exposure)))
+
+
+def test_policy_calm_until_notified_then_congested():
+    pol = NotificationPolicy()
+    cfg = pol.config
+    b = DecisionBatch.of(np.full(4, 65536.0), site="s")
+    assert (pol.decide(b) == cfg.mode_calm).all()
+    pol.update(b, _fb(1.0))                      # EMA jumps to 1.0
+    assert (pol.decide(b) == cfg.mode_congested).all()
+    st = pol.site_state("s")
+    assert st.congested and st.n == 1
+
+
+def test_policy_hysteresis_and_dwell():
+    pol = NotificationPolicy(NotificationConfig(min_dwell=2))
+    cfg = pol.config
+    b = DecisionBatch.of(np.full(4, 65536.0), site="s")
+    pol.decide(b)
+    pol.update(b, _fb(1.0))
+    assert pol.site_state("s").congested
+    # exposure collapses to 0: EMA halves each update, but the regime
+    # holds until BOTH the low-water mark and the dwell are satisfied
+    flips = []
+    for _ in range(12):
+        pol.update(b, _fb(0.0))
+        flips.append(pol.site_state("s").congested)
+    assert flips[0] and not flips[-1]            # held, then released
+    assert (pol.decide(b) == cfg.mode_calm).all()
+
+
+def test_policy_none_signal_is_noop():
+    pol = NotificationPolicy()
+    b = DecisionBatch.of(np.full(4, 65536.0), site="s")
+    pol.decide(b)
+    fb = Feedback.of(np.full(4, 100.0), np.ones(4))   # notified=None
+    pol.update(b, fb)
+    assert pol.site_state("s") is None or not pol.site_state("s").congested
+    assert (pol.decide(b) == pol.config.mode_calm).all()
+
+
+def test_policy_sites_independent_and_resettable():
+    pol = NotificationPolicy()
+    ba = DecisionBatch.of(np.full(4, 65536.0), site="a")
+    bb = DecisionBatch.of(np.full(4, 65536.0), site="b")
+    pol.decide(ba)
+    pol.update(ba, _fb(1.0))
+    pol.decide(bb)
+    pol.update(bb, _fb(0.0))
+    assert pol.site_state("a").congested
+    assert not pol.site_state("b").congested
+    assert pol.reset_samples(lambda s: s == "a") == 1
+    assert pol.site_state("a") is None           # back to calm regime
+    assert pol.site_state("b") is not None
+
+
+def test_engine_registration_and_factory():
+    assert "notification" in POLICY_NAMES
+    eng = make_engine("notification")
+    assert isinstance(eng.policy, NotificationPolicy)
+    b = DecisionBatch.of(np.full(4, 65536.0), site="s")
+    assert (eng.decide(b) == eng.policy.config.mode_calm).all()
+    # the bus pipes notified exposure straight into the automaton
+    eng.bus.publish_flow_arrays(np.full(4, 5.0), np.zeros(4),
+                                notified=np.ones(4))
+    assert (eng.decide(b) == eng.policy.config.mode_congested).all()
+
+
+def test_engine_broadcast_preserves_notified():
+    """One aggregate (counter-window) sample fans out over the batch
+    without losing the notification signal."""
+    eng = make_engine("notification")
+    b = DecisionBatch.of(np.full(8, 65536.0), site="s")
+    eng.decide(b)
+    eng.bus.publish_flow_arrays([5.0], [0.0], notified=[1.0])
+    assert eng.policy.site_state("s").congested
