@@ -32,10 +32,15 @@ bench-smoke:
 		--out BENCH_faults.json
 	PYTHONPATH=src $(PY) -m benchmarks.notification_matrix --smoke \
 		--out BENCH_notifications.json
+	PYTHONPATH=src $(PY) -m benchmarks.perf_sim --smoke --require-jax \
+		--out /tmp/bench_sim_smoke.json
 
-# simulator phase-kernel perf trajectory: write + schema-check BENCH_sim.json
+# simulator phase-kernel perf trajectory: write + schema-check
+# BENCH_sim.json (paper scale — the committed numbers; see
+# docs/performance.md for the 50k/120k crossover discussion)
 bench-perf:
-	PYTHONPATH=src $(PY) -m benchmarks.perf_sim --smoke --out BENCH_sim.json
+	PYTHONPATH=src $(PY) -m benchmarks.perf_sim --full --require-jax \
+		--out BENCH_sim.json
 	$(PY) scripts/ci_lint.py --bench
 
 # multi-tenant interference matrix: write + schema-check

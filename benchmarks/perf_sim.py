@@ -13,10 +13,15 @@ same traffic pattern, phase after phase):
   * jax[_plan]  — the jitted backend (skipped when jax is unusable).
 
 Emits the ``name,us_per_call,derived`` CSV rows all benchmarks print,
-plus ``BENCH_sim.json`` (schema documented in docs/performance.md):
-per-backend phases/s, flows/s, per-stage timings, and the headline
-speedups.  ``--smoke`` shrinks the phase for CI; `make bench-perf`
-runs it and schema-checks the JSON via ``scripts/ci_lint.py --bench``.
+plus ``BENCH_sim.json`` at schema ``bench_sim/v2`` (documented in
+docs/performance.md): per-backend phases/s, flows/s, per-stage timings,
+and ``compile_s`` — the one-time first-call cost (jit tracing +
+compilation on jax; cache warmup elsewhere) measured separately so
+steady-state ``phase_s`` never includes it.  ``--smoke`` shrinks the
+phase for CI; ``--require-jax`` makes a silent jax->numpy fallback a
+hard error (asserts the jitted pipeline actually dispatched).
+`make bench-perf` runs it and schema-checks the JSON via
+``scripts/ci_lint.py --bench``.
 """
 
 from __future__ import annotations
@@ -36,7 +41,7 @@ from repro.dragonfly.reference import reference_run_phase
 from repro.dragonfly.routing import RoutingPolicy
 from repro.dragonfly.topology import make_allocation
 
-SCHEMA = "bench_sim/v1"
+SCHEMA = "bench_sim/v2"
 
 
 def _phase_inputs(topo: DragonflyTopology, n_flows: int, seed: int = 42):
@@ -62,18 +67,23 @@ def _time_backend(topo, src, dst, size, alloc, *, phases, backend="numpy",
         plan = sim.plan_for(src, dst, size) if use_plans else None
         return sim.run_phase(src, dst, size, pol, alloc, plan=plan)
 
-    one()                                   # warmup (jit compile, caches)
+    t0 = time.perf_counter()
+    one()                         # cold call: jit trace/compile, caches
+    first_s = time.perf_counter() - t0
+    one()                         # settle: second call is steady state
     sim.stage_time_s.clear()
     t0 = time.perf_counter()
     res = None
     for _ in range(phases):
         res = one()
     dt = (time.perf_counter() - t0) / phases
+    compile_s = max(0.0, first_s - dt)
     stages = {k: v / phases for k, v in sim.stage_time_s.items()}
-    return dt, stages, res
+    return dt, compile_s, stages, res
 
 
-def run(n_flows: int, phases: int, out_path: str | None):
+def run(n_flows: int, phases: int, out_path: str | None,
+        require_jax: bool = False):
     topo = DragonflyTopology(TopologyParams(n_groups=12))
     src, dst, size = _phase_inputs(topo, n_flows)
     alloc = make_allocation(topo, min(64, n_flows), spread="inter_groups",
@@ -83,23 +93,37 @@ def run(n_flows: int, phases: int, out_path: str | None):
             ("numpy_plan", dict(backend="numpy", use_plans=True))]
     from repro.compat.runtime import resolve_backend
     jax_ok = resolve_backend("jax") == "jax"
+    if require_jax and not jax_ok:
+        raise RuntimeError("--require-jax: jax backend unavailable "
+                           "(resolve_backend fell back to numpy)")
     if jax_ok:
         arms.append(("jax_plan", dict(backend="jax", use_plans=True)))
 
+    if jax_ok:
+        from repro.dragonfly.jax_backend import PIPELINE_CALLS
+        calls_before = dict(PIPELINE_CALLS)
     results = {}
     checks = {}
     for name, kw in arms:
-        dt, stages, res = _time_backend(topo, src, dst, size, alloc,
-                                        phases=phases, **kw)
+        dt, compile_s, stages, res = _time_backend(
+            topo, src, dst, size, alloc, phases=phases, **kw)
         results[name] = {
             "phase_s": dt,
             "phases_per_s": 1.0 / dt,
             "flows_per_s": n_flows / dt,
+            "compile_s": compile_s,
             "stages_s": stages,
         }
         checks[name] = res
         emit(f"perf_sim.{name}.phase", dt * 1e6,
-             f"flows_per_s={n_flows / dt:.0f}")
+             f"flows_per_s={n_flows / dt:.0f} compile_s={compile_s:.3f}")
+    if require_jax:
+        from repro.dragonfly.jax_backend import PIPELINE_CALLS
+        dispatched = sum(PIPELINE_CALLS.values()) \
+            - sum(calls_before.values())
+        if dispatched <= 0:
+            raise RuntimeError("--require-jax: jax arm never dispatched "
+                               "the jitted pipeline (silent fallback?)")
 
     # seed-equivalence sanity: the numpy fast path must replay the
     # reference bit-for-bit on the same seed (the golden-trace property)
@@ -114,12 +138,18 @@ def run(n_flows: int, phases: int, out_path: str | None):
     for k, v in speedups.items():
         emit(f"perf_sim.speedup.{k}", v, "x")
 
+    device = None
+    if jax_ok:
+        import jax
+        device = {"backend": jax.default_backend(),
+                  "n_devices": int(jax.device_count())}
     doc = {
         "schema": SCHEMA,
         "flows": int(n_flows),
         "phases_timed": int(phases),
         "topology": {"n_groups": 12, "n_links": int(topo.n_links)},
         "seed_exact": seed_exact,
+        "jax_device": device,
         "backends": results,
         "speedup": speedups,
     }
@@ -130,11 +160,11 @@ def run(n_flows: int, phases: int, out_path: str | None):
 
 
 def main(full: bool = False, smoke: bool = False,
-         out: str | None = None) -> dict:
+         out: str | None = None, require_jax: bool = False) -> dict:
     n_flows, phases = (50_000, 5) if not smoke else (4_000, 3)
     if full:
         n_flows, phases = 120_000, 5
-    return run(n_flows, phases, out)
+    return run(n_flows, phases, out, require_jax=require_jax)
 
 
 if __name__ == "__main__":
@@ -143,7 +173,10 @@ if __name__ == "__main__":
                     help="small CI pass (4k flows)")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale pass (120k flows)")
+    ap.add_argument("--require-jax", action="store_true",
+                    help="fail instead of silently skipping the jax arm")
     ap.add_argument("--out", default="BENCH_sim.json",
                     help="output JSON path (default: BENCH_sim.json)")
     args = ap.parse_args()
-    main(full=args.full, smoke=args.smoke, out=args.out)
+    main(full=args.full, smoke=args.smoke, out=args.out,
+         require_jax=args.require_jax)

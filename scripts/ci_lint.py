@@ -112,7 +112,13 @@ _BENCH_BACKEND_FIELDS = ("phase_s", "phases_per_s", "flows_per_s")
 
 
 def lint_bench_schema(require: bool = False) -> list:
-    """BENCH_sim.json parses and matches the bench_sim/v1 schema."""
+    """BENCH_sim.json parses and matches bench_sim/v1 or /v2.
+
+    v2 (benchmarks/perf_sim.py since the device-resident engine) adds a
+    required numeric ``compile_s`` per backend — the one-time first-call
+    cost split out of ``phase_s`` — and requires non-empty ``stages_s``
+    for jax* backends (an empty dict there means the jitted pipeline
+    silently fell back / never profiled)."""
     path = ROOT / "BENCH_sim.json"
     if not path.exists():
         return ["BENCH_sim.json: missing (run `make bench-perf`)"] \
@@ -127,16 +133,23 @@ def lint_bench_schema(require: bool = False) -> list:
             bad.append(f"BENCH_sim.json: missing key {key!r}")
         elif not isinstance(doc[key], typ):
             bad.append(f"BENCH_sim.json: {key!r} should be {typ.__name__}")
-    if doc.get("schema") not in (None, "bench_sim/v1"):
-        bad.append(f"BENCH_sim.json: unknown schema {doc.get('schema')!r}")
+    schema = doc.get("schema")
+    if schema not in (None, "bench_sim/v1", "bench_sim/v2"):
+        bad.append(f"BENCH_sim.json: unknown schema {schema!r}")
+    v2 = schema == "bench_sim/v2"
+    fields = _BENCH_BACKEND_FIELDS + (("compile_s",) if v2 else ())
     for name, entry in (doc.get("backends") or {}).items():
-        for f in _BENCH_BACKEND_FIELDS:
+        for f in fields:
             if not isinstance(entry.get(f), (int, float)):
                 bad.append(f"BENCH_sim.json: backends.{name}.{f} "
                            f"missing or non-numeric")
-        if not isinstance(entry.get("stages_s", {}), dict):
+        stages = entry.get("stages_s", {})
+        if not isinstance(stages, dict):
             bad.append(f"BENCH_sim.json: backends.{name}.stages_s "
                        f"should be a dict")
+        elif v2 and name.startswith("jax") and not stages:
+            bad.append(f"BENCH_sim.json: backends.{name}.stages_s empty "
+                       f"(jax arm must record stage timings)")
     for name, v in (doc.get("speedup") or {}).items():
         if not isinstance(v, (int, float)):
             bad.append(f"BENCH_sim.json: speedup.{name} non-numeric")

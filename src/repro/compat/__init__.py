@@ -20,11 +20,11 @@ monkeypatch a flag plus a fake jax attribute to exercise the modern
 branch on an old jax (tests/test_compat.py).
 """
 
-from repro.compat.compilation import cost_analysis
+from repro.compat.compilation import cost_analysis, jit_compiled
 from repro.compat.mesh import (abstract_axis_sizes, axis_types,
                                get_abstract_mesh, make_mesh, set_mesh)
-from repro.compat.runtime import (jax_available, pallas_available,
-                                  resolve_backend)
+from repro.compat.runtime import (jax_available, on_tpu, pallas_available,
+                                  resolve_backend, resolve_pallas_kernel)
 from repro.compat.shardmap import shard_map
 from repro.compat.version import (JAX_VERSION, describe,
                                   jax_version_at_least, parse_version)
@@ -34,6 +34,7 @@ __all__ = [
     "abstract_axis_sizes", "axis_types", "get_abstract_mesh",
     "make_mesh", "set_mesh",
     "shard_map",
-    "cost_analysis",
+    "cost_analysis", "jit_compiled",
     "jax_available", "pallas_available", "resolve_backend",
+    "on_tpu", "resolve_pallas_kernel",
 ]

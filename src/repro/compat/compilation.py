@@ -4,9 +4,36 @@
 returns a list of per-program property dicts, jax>=0.7 returns the
 single flattened dict.  The dry-run reads scalar keys ("flops", ...),
 so normalize to the modern dict shape on both.
+
+`jit_compiled` wraps `jax.jit` with graceful degradation of buffer
+donation: the device-resident phase engine donates its largest
+per-phase operand (the Gumbel noise block) so XLA can reuse the buffer
+for outputs, but donation keyword support/semantics have drifted across
+jax versions — a jax whose `jit` rejects the donation arguments still
+gets a working (undonated) compiled function instead of a crash.
 """
 
 from __future__ import annotations
+
+
+def jit_compiled(fun, *, static_argnames=None, donate_argnums=None):
+    """`jax.jit(fun)` that degrades donation instead of failing.
+
+    Accepts the subset of jit options the repo uses.  When the
+    installed jax rejects ``donate_argnums`` (or donation of these
+    arguments), the function is re-wrapped without donation — the
+    result is always callable, merely less memory-frugal."""
+    import jax
+
+    kw = {}
+    if static_argnames:
+        kw["static_argnames"] = tuple(static_argnames)
+    if donate_argnums:
+        try:
+            return jax.jit(fun, donate_argnums=tuple(donate_argnums), **kw)
+        except TypeError:            # pre-donation jit signature
+            pass
+    return jax.jit(fun, **kw)
 
 
 def cost_analysis(compiled) -> dict:

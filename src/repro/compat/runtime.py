@@ -47,6 +47,36 @@ def pallas_available() -> bool:
     return _PALLAS_OK
 
 
+def on_tpu() -> bool:
+    """Is the default jax backend a TPU?  False when jax is unusable."""
+    if not jax_available():
+        return False
+    import jax
+
+    return jax.default_backend() == "tpu"
+
+
+#: SimParams.pallas_kernel knob values (docs/performance.md)
+PALLAS_KNOBS = ("auto", "on", "off")
+
+
+def resolve_pallas_kernel(knob: str) -> bool:
+    """Resolve the ``SimParams.pallas_kernel`` knob to use-kernel or not.
+
+    "auto" uses the Pallas segment-sum only where it can win — on TPU
+    (interpret-mode Pallas is far slower than jax.ops.segment_sum on
+    CPU); "on" forces it everywhere (interpret mode off-TPU — the parity
+    testing path); "off" never uses it, even on TPU."""
+    if knob == "on":
+        return True
+    if knob == "off":
+        return False
+    if knob != "auto":
+        raise ValueError(f"unknown pallas_kernel knob {knob!r}; "
+                         f"expected one of {PALLAS_KNOBS}")
+    return pallas_available() and on_tpu()
+
+
 def resolve_backend(requested: str) -> str:
     """Map a requested simulator backend to a usable one.
 

@@ -120,9 +120,15 @@ class SimParams:
     host_noise_sigma: float = 0.25     # lognormal sigma of host-side jitter
     nic_clock_ghz: float = 1.0
     #: compute backend for the phase kernel: "numpy" (default, seed-exact)
-    #: or "jax" (jitted pipeline + Pallas segment-sum on TPU; falls back to
-    #: numpy with a warning when jax is unusable).  docs/performance.md.
+    #: or "jax" (device-resident jitted pipeline; falls back to numpy
+    #: with a warning when jax is unusable).  docs/performance.md.
     backend: str = "numpy"
+    #: Pallas segment-sum inside the jax pipeline: "auto" uses it on TPU
+    #: only (interpret-mode Pallas loses badly to jax.ops.segment_sum on
+    #: CPU), "on" forces it everywhere (interpret off-TPU — the parity-
+    #: testing path), "off" never uses it.  repro.compat.runtime resolves
+    #: the knob; ignored by the numpy backend.
+    pallas_kernel: str = "auto"
     #: topology spec resolved by make_topology when the simulator is built
     #: without an explicit Topology instance: a registered name ("aries",
     #: "dragonfly", "dragonfly_plus", "fattree") optionally with kwargs,
@@ -307,6 +313,12 @@ class PhasePlan:
     nic_ids: np.ndarray         # [n] injection link per flow
     packets: np.ndarray         # [n] request packets per flow
     ser_s_app: float            # clean serialization time of largest msg
+    #: jax backend: the plan's phase-invariant tensors pinned on device
+    #: (filled lazily by repro.dragonfly.jax_backend._device_plan; the
+    #: bundle's lifetime is the plan's, and `plan_for`'s cache key —
+    #: topology spec + fault epoch + notify epoch + pattern — is what
+    #: keys the device side of the cache too)
+    device_bundle: object = field(default=None, repr=False, compare=False)
 
     @property
     def n_flows(self) -> int:
@@ -319,6 +331,10 @@ class DragonflySimulator:
         if params.backend not in BACKENDS:
             raise ValueError(f"unknown backend {params.backend!r}; "
                              f"expected one of {BACKENDS}")
+        if params.pallas_kernel not in ("auto", "on", "off"):
+            raise ValueError(
+                f"unknown pallas_kernel {params.pallas_kernel!r}; "
+                f"expected 'auto', 'on' or 'off'")
         # topo=None resolves params.topology ("aries", "dragonfly:p=2,...",
         # any registered family spec) through make_topology
         self.topo = topo = make_topology(topo if topo is not None
@@ -560,6 +576,31 @@ class DragonflySimulator:
         (FlowResult.tenant_*).  Mutually exclusive with `allocation` —
         a K=1 TenantSegments is bit-identical to passing that tenant's
         Allocation directly (tests/test_tenancy.py)."""
+        ctx = self._phase_begin(src_nodes, dst_nodes, bytes_, policy,
+                                allocation=allocation, modes=modes,
+                                plan=plan, tenants=tenants)
+        if ctx["result"] is not None:
+            return ctx["result"]
+        return self._phase_finish(ctx, self._run_kernel(ctx))
+
+    def _phase_begin(self, src_nodes, dst_nodes, bytes_,
+                     policy: RoutingPolicy,
+                     allocation: Allocation | None = None,
+                     modes: np.ndarray | None = None,
+                     plan: PhasePlan | None = None,
+                     tenants: TenantSegments | None = None) -> dict:
+        """Host half #1 of run_phase, up to the kernel boundary.
+
+        Draws ALL of the phase's randomness (bg flows, candidate paths,
+        phantom noise, Gumbel spray noise) from the simulator RNG and
+        assembles the kernel inputs into a context dict; `_run_kernel`
+        and `_phase_finish` complete the phase.  This split is what lets
+        ``run_phase_batch`` fuse several simulators' kernels into one
+        vmapped jax dispatch: begin/finish stay per-simulator (so
+        batching never changes any RNG draw), only the pure kernel is
+        batched.  For the numpy backend the host score base is computed
+        here; the jax backend computes it in-graph and the host copy is
+        skipped (``ctx["score0"]`` stays None)."""
         p = self.params
         topo = self.topo
         prof = p.profile_stages
@@ -631,7 +672,7 @@ class DragonflySimulator:
                     tenant_of = tenant_of[idx]
                 n_app = p.max_flows
         if n_app == 0 and not (p.bg_enable and p.bg_flows_per_phase):
-            return FlowResult(*(np.zeros(0),) * 5, 0.0)
+            return {"result": FlowResult(*(np.zeros(0),) * 5, 0.0)}
 
         bg = self._bg_flows(tenants.union_allocation if tenants is not None
                             else allocation)
@@ -750,8 +791,6 @@ class DragonflySimulator:
             cap_gbs = cap_gbs * np.where(fstate.dead, 1.0,
                                          fstate.capacity_scale)
         cap_bps = cap_gbs * 1e9
-        inj_cap = cap_gbs[nic_ids] * 1e9 * window_s
-        size_inst = np.minimum(size_all, inj_cap)
         bg_policy = RoutingPolicy(RoutingMode.ADAPTIVE_0)
 
         # --- loop-invariant score base + fused per-row spray constants -----
@@ -771,9 +810,23 @@ class DragonflySimulator:
             t_rows = np.concatenate(
                 [t_rows,
                  np.full(n_bg, max(bg_policy.spray_temperature_s, 1e-12))])
-        base = (est_queue_s[safe] * valid).sum(axis=-1) \
-            + hl_rows[:, None] * hops
-        score0 = apply_bias(base, is_nonmin, bias_rows, posinf, neginf)
+        # backend for THIS phase's kernel: the jax path consumes the
+        # fault cand_mask and notification penalties in-graph, so it no
+        # longer falls back to numpy on faulted/notified phases
+        backend = "numpy"
+        if p.backend == "jax":
+            from repro.compat.runtime import resolve_backend
+            if resolve_backend(p.backend) == "jax":
+                backend = "jax"
+        score0 = size_inst = nic_load = None
+        if backend == "numpy":
+            # host score base — skipped on the jax path, where the same
+            # gather/bias math runs fused in-graph from est_queue_s
+            size_inst = np.minimum(size_all,
+                                   cap_gbs[nic_ids] * 1e9 * window_s)
+            base = (est_queue_s[safe] * valid).sum(axis=-1) \
+                + hl_rows[:, None] * hops
+            score0 = apply_bias(base, is_nonmin, bias_rows, posinf, neginf)
         noise_scale = (t_rows * 0.9)[:, None] \
             / np.sqrt(np.maximum(packets_all, 1.0))[:, None]
         # whole-phase spray noise, drawn up-front: one (iters, n, ncand)
@@ -781,30 +834,88 @@ class DragonflySimulator:
         # app-then-bg draws did (Gumbel is one double per variate)
         n_spray = max(1, p.route_feedback_iters)
         gnoise = self.rng.gumbel(0.0, 1.0, size=(n_spray, n_all, ncand))
-        nic_load = np.bincount(nic_ids, weights=size_inst,
-                               minlength=topo.n_links)
+        if backend == "numpy":
+            nic_load = np.bincount(nic_ids, weights=size_inst,
+                                   minlength=topo.n_links)
         if prof:
             t0 = self._stage("estimate", t0)
+        return {
+            "result": None, "backend": backend,
+            "n_app": n_app, "n_all": n_all, "ncand": ncand,
+            "plan": plan, "safe": safe, "valid": valid, "hops": hops,
+            "is_nonmin": is_nonmin, "pair_links": pair_links,
+            "pair_fc": pair_fc, "nic_ids": nic_ids,
+            "size": size, "size_all": size_all,
+            "est_queue_s": est_queue_s, "hl_rows": hl_rows,
+            "bias_rows": bias_rows, "posinf": posinf, "neginf": neginf,
+            "t_rows": t_rows, "noise_scale": noise_scale,
+            "gnoise": gnoise, "window_s": window_s, "cap_bps": cap_bps,
+            "cap_window": cap_bps * window_s,
+            "score0": score0, "size_inst": size_inst,
+            "nic_load": nic_load,
+            "cand_mask": cand_mask, "stranded": stranded,
+            "fstate": fstate, "notify_vis": notify_vis,
+            "est_notify": est_notify,
+            "tenants": tenants, "tenant_of": tenant_of,
+            "allocation": allocation, "t0": t0,
+        }
 
-        # --- fixed point + observables (backend-dispatched) ----------------
-        # faulted phases (cand_mask set) always run the numpy kernel: the
-        # jax pipeline has no mask plumbing, and fault phases are rare
-        kernel = self._fixed_point_numpy
-        if p.backend == "jax" and cand_mask is None:
-            from repro.compat.runtime import resolve_backend
-            if resolve_backend(p.backend) == "jax":
-                from repro.dragonfly.jax_backend import fixed_point_jax
-                kernel = fixed_point_jax
-        w, rho, load_q, lat_us, s_flit = kernel(
-            self, score0=score0, safe=safe, valid=valid, hops=hops,
-            est_queue_s=est_queue_s, hl_rows=hl_rows, is_nonmin=is_nonmin,
-            bias_rows=bias_rows, posinf=posinf, neginf=neginf,
-            t_rows=t_rows, noise_scale=noise_scale, gnoise=gnoise,
-            size_inst=size_inst, size_all=size_all,
-            pair_links=pair_links, pair_fc=pair_fc, nic_load=nic_load,
-            nic_ids=nic_ids, cap_window=cap_bps * window_s,
-            window_s=window_s,
-            **({} if cand_mask is None else {"cand_mask": cand_mask}))
+    def _run_kernel(self, ctx: dict):
+        """Fixed point + observables for one prepared phase context."""
+        if ctx["backend"] == "jax":
+            from repro.dragonfly.jax_backend import fixed_point_jax
+            return fixed_point_jax(self, ctx)
+        return self._fixed_point_numpy(self,
+                                       **self._numpy_kernel_kwargs(ctx))
+
+    def _numpy_kernel_kwargs(self, ctx: dict) -> dict:
+        """Kwargs for `_fixed_point_numpy` from a phase context.
+
+        A ctx prepared for the jax kernel skips the host score base;
+        compute it on demand here (values identical to the eager numpy
+        path) so such a phase can still be demoted to numpy."""
+        if ctx["score0"] is None:
+            ctx["size_inst"] = np.minimum(
+                ctx["size_all"], ctx["cap_window"][ctx["nic_ids"]])
+            base = (ctx["est_queue_s"][ctx["safe"]]
+                    * ctx["valid"]).sum(axis=-1) \
+                + ctx["hl_rows"][:, None] * ctx["hops"]
+            ctx["score0"] = apply_bias(base, ctx["is_nonmin"],
+                                       ctx["bias_rows"], ctx["posinf"],
+                                       ctx["neginf"])
+            ctx["nic_load"] = np.bincount(
+                ctx["nic_ids"], weights=ctx["size_inst"],
+                minlength=self.topo.n_links)
+        return dict(
+            score0=ctx["score0"], safe=ctx["safe"], valid=ctx["valid"],
+            hops=ctx["hops"], est_queue_s=ctx["est_queue_s"],
+            hl_rows=ctx["hl_rows"], is_nonmin=ctx["is_nonmin"],
+            bias_rows=ctx["bias_rows"], posinf=ctx["posinf"],
+            neginf=ctx["neginf"], t_rows=ctx["t_rows"],
+            noise_scale=ctx["noise_scale"], gnoise=ctx["gnoise"],
+            size_inst=ctx["size_inst"], size_all=ctx["size_all"],
+            pair_links=ctx["pair_links"], pair_fc=ctx["pair_fc"],
+            nic_load=ctx["nic_load"], nic_ids=ctx["nic_ids"],
+            cap_window=ctx["cap_window"], window_s=ctx["window_s"],
+            cand_mask=ctx["cand_mask"])
+
+    def _phase_finish(self, ctx: dict, out) -> FlowResult:
+        """Host half #2: notified exposure, Eq.(2) times, queue and
+        notification-state updates, NIC counters, tenant breakdown."""
+        p = self.params
+        topo = self.topo
+        prof = p.profile_stages
+        t0 = ctx["t0"]
+        n_app, ncand = ctx["n_app"], ctx["ncand"]
+        safe, valid, is_nonmin = ctx["safe"], ctx["valid"], ctx["is_nonmin"]
+        pair_links, pair_fc = ctx["pair_links"], ctx["pair_fc"]
+        size, size_all = ctx["size"], ctx["size_all"]
+        window_s, cap_bps = ctx["window_s"], ctx["cap_bps"]
+        fstate, stranded = ctx["fstate"], ctx["stranded"]
+        notify_vis, est_notify = ctx["notify_vis"], ctx["est_notify"]
+        tenants, tenant_of = ctx["tenants"], ctx["tenant_of"]
+        allocation = ctx["allocation"]
+        w, rho, load_q, lat_us, s_flit = out
         w_app = w[:n_app]
         # per-flow notified exposure: the fraction of each app flow's
         # sprayed bytes that crossed a visibly-flagged link (all zero on
@@ -1114,3 +1225,47 @@ class DragonflySimulator:
             self.link_notify_age[:] = -1
         if include_estimates:
             self.est_memory_s[:] = 0.0
+
+
+def run_phase_batch(calls) -> list:
+    """Run several simulators' phases, fusing compatible jax kernels.
+
+    ``calls``: sequence of ``(sim, kwargs)`` pairs — each ``kwargs`` is
+    one `DragonflySimulator.run_phase` argument dict (the sims should be
+    distinct; one sim may not appear twice in a batch).  Per-sim host
+    halves (`_phase_begin` / `_phase_finish`) run exactly as in
+    sequential ``run_phase`` calls — same RNG draws, same state updates
+    — while jax-backed kernels whose `batch_signature`s agree are
+    evaluated through ONE vmapped device dispatch
+    (`jax_backend.fixed_point_jax_batch`).  Everything else (numpy
+    backends, singleton shapes) runs its kernel per-sim.  Returns the
+    [FlowResult] list in call order.
+
+    This is the tenancy lockstep driver's primitive: whole sweep
+    columns (same mix, different victim arms) advance round-for-round
+    with every cell's phase kernel batched into one dispatch
+    (docs/interference.md)."""
+    ctxs = [sim._phase_begin(**kw) for sim, kw in calls]
+    outs: dict = {}
+    groups: dict = {}
+    for i, ((sim, _), ctx) in enumerate(zip(calls, ctxs)):
+        if ctx["result"] is None and ctx["backend"] == "jax":
+            from repro.dragonfly.jax_backend import batch_signature
+            groups.setdefault(batch_signature(sim, ctx), []).append(i)
+    for idxs in groups.values():
+        if len(idxs) < 2:
+            continue
+        from repro.dragonfly.jax_backend import fixed_point_jax_batch
+        batch = [(calls[i][0], ctxs[i]) for i in idxs]
+        for i, o in zip(idxs, fixed_point_jax_batch(batch)):
+            outs[i] = o
+    results = []
+    for i, ((sim, _), ctx) in enumerate(zip(calls, ctxs)):
+        if ctx["result"] is not None:
+            results.append(ctx["result"])
+            continue
+        out = outs.get(i)
+        if out is None:
+            out = sim._run_kernel(ctx)
+        results.append(sim._phase_finish(ctx, out))
+    return results

@@ -2,24 +2,22 @@
 
 from __future__ import annotations
 
-import jax
-
+from repro.compat.runtime import on_tpu
 from repro.kernels.segment_sum.ref import segment_sum_ref
 from repro.kernels.segment_sum.segment_sum import segment_sum_pallas
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def segment_sum_op(values, segment_ids, num_segments: int, *,
-                   force_kernel: bool = False):
-    """Dispatch: Pallas kernel on TPU (or when forced, in interpret
-    mode); jax.ops.segment_sum reference otherwise."""
-    if _on_tpu():
-        return segment_sum_pallas(values, segment_ids, num_segments,
-                                  interpret=False)
+                   force_kernel: bool | None = None):
+    """Dispatch with the same tri-state as ``SimParams.pallas_kernel``:
+
+    ``None`` (auto) — Pallas kernel on TPU, ``jax.ops.segment_sum``
+    reference elsewhere; ``True`` — always Pallas (interpret mode
+    off-TPU, the parity-testing path); ``False`` — never Pallas, even
+    on TPU."""
+    if force_kernel is None:
+        force_kernel = on_tpu()
     if force_kernel:
         return segment_sum_pallas(values, segment_ids, num_segments,
-                                  interpret=True)
+                                  interpret=not on_tpu())
     return segment_sum_ref(values, segment_ids, num_segments)

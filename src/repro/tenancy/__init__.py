@@ -16,11 +16,12 @@ See docs/interference.md.
 """
 
 from repro.tenancy.engine import (InterferenceEngine, MixResult,
-                                  TenantReport, arm_label)
+                                  TenantReport, arm_label,
+                                  run_mixes_lockstep)
 from repro.tenancy.spec import TenancyMix, Workload
 from repro.tenancy.sweep import sweep
 
 __all__ = [
     "InterferenceEngine", "MixResult", "TenantReport", "arm_label",
-    "TenancyMix", "Workload", "sweep",
+    "TenancyMix", "Workload", "sweep", "run_mixes_lockstep",
 ]

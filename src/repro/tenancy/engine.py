@@ -141,6 +141,26 @@ class InterferenceEngine:
              rounds: int, topo: Topology | None = None, faults=None):
         """Core loop: returns ([TenantReport], mean tenant_link_loads).
 
+        Sequential driver over `_run_steps` — one run_phase per yielded
+        request.  `run_mixes_lockstep` drives the same generator with
+        phases batched across cells; both orderings are identical per
+        cell because each generator owns its simulator and RNG."""
+        gen = self._run_steps(workloads, allocs, rounds, topo=topo,
+                              faults=faults)
+        res = None
+        while True:
+            try:
+                sim, kwargs = gen.send(res)
+            except StopIteration as stop:
+                return stop.value
+            res = sim.run_phase(**kwargs)
+
+    def _run_steps(self, workloads: Sequence[Workload], allocs: Sequence,
+                   rounds: int, topo: Topology | None = None, faults=None):
+        """Core loop as a generator: yields ``(sim, run_phase kwargs)``
+        per round, receives the FlowResult back via ``send``, and
+        returns ([TenantReport], mean tenant_link_loads).
+
         Builds a FRESH simulator (deterministic in SimParams.seed), so a
         K=1 call is the run-alone baseline of that tenant on the same
         nodes — and is bit-identical, round for round, to driving
@@ -196,9 +216,10 @@ class InterferenceEngine:
                     m[:] = w.arm
                     mode_l.append(m)
             seg = TenantSegments.of(allocs, counts)
-            res = sim.run_phase(
-                np.concatenate(srcs), np.concatenate(dsts),
-                np.concatenate(byts), self._base_policy,
+            res = yield sim, dict(
+                src_nodes=np.concatenate(srcs),
+                dst_nodes=np.concatenate(dsts),
+                bytes_=np.concatenate(byts), policy=self._base_policy,
                 modes=np.concatenate(mode_l), tenants=seg)
             if res.tenant_link_loads is not None:
                 loads_acc = res.tenant_link_loads if loads_acc is None \
@@ -336,3 +357,79 @@ class InterferenceEngine:
         return MixResult(mix=mix.name, rounds=rounds, victim=mix.victim,
                          tenants=reports, tenant_link_loads=loads,
                          faults=faults.describe() if faults else None)
+
+
+# ------------------------------------------------------- lockstep driving
+def _drive_lockstep(gens) -> list:
+    """Advance several `_run_steps` generators round-for-round.
+
+    Each round, every live generator's pending phase request is handed
+    to `run_phase_batch` as ONE call — jax-backed cells with matching
+    kernel shapes run as a single vmapped dispatch.  Per-cell results
+    are identical to sequential driving: each generator owns its
+    simulator and RNG stream, so only the dispatch is shared."""
+    from repro.dragonfly.simulator import run_phase_batch
+
+    rets = [None] * len(gens)
+    reqs = [None] * len(gens)
+    live = []
+    for i, gen in enumerate(gens):
+        try:
+            reqs[i] = gen.send(None)
+            live.append(i)
+        except StopIteration as stop:
+            rets[i] = stop.value
+    while live:
+        outs = run_phase_batch([reqs[i] for i in live])
+        nxt = []
+        for i, res in zip(live, outs):
+            try:
+                reqs[i] = gens[i].send(res)
+                nxt.append(i)
+            except StopIteration as stop:
+                rets[i] = stop.value
+        live = nxt
+    return rets
+
+
+def run_mixes_lockstep(engines, mixes, *, rounds: int = 4,
+                       baselines: bool = True) -> list:
+    """[MixResult] for N (engine, mix) cells advanced in lockstep.
+
+    The batched counterpart of ``[e.run_mix(m) for e, m in ...]`` for
+    fault-free cells: every cell's round-r phase kernel is dispatched
+    together through `run_phase_batch` (one vmapped jax call when the
+    column's shapes agree — the sweep-column case, where cells differ
+    only in the victim's routing arm), and so are the per-tenant
+    run-alone baselines.  Cell-for-cell results match the sequential
+    path: batching changes the dispatch, never the draws."""
+    prepped = []
+    for eng, mix in zip(engines, mixes):
+        topo = eng._topo_for(mix)
+        allocs = mix.materialize(topo, seed=eng.seed)
+        prepped.append((eng, mix, topo, allocs))
+    outs = _drive_lockstep([
+        eng._run_steps(mix.workloads, allocs, rounds, topo=topo)
+        for eng, mix, topo, allocs in prepped])
+    alone: dict = {}
+    if baselines:
+        for k in range(max(len(m) for _, m, _, _ in prepped)):
+            idx = [i for i, (_, m, _, _) in enumerate(prepped)
+                   if k < len(m)]
+            base = _drive_lockstep([
+                prepped[i][0]._run_steps(
+                    (prepped[i][1].workloads[k],), [prepped[i][3][k]],
+                    rounds, topo=prepped[i][2])
+                for i in idx])
+            for i, (reports, _) in zip(idx, base):
+                alone[(i, k)] = reports[0].time_us
+    results = []
+    for i, ((eng, mix, topo, allocs), (reports, loads)) in \
+            enumerate(zip(prepped, outs)):
+        for k, rep in enumerate(reports):
+            if (i, k) in alone:
+                rep.alone_time_us = alone[(i, k)]
+        results.append(MixResult(mix=mix.name, rounds=rounds,
+                                 victim=mix.victim, tenants=reports,
+                                 tenant_link_loads=loads, faults=None))
+    return results

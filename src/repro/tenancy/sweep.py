@@ -16,31 +16,57 @@ from typing import Mapping, Sequence
 
 from repro.dragonfly.simulator import SimParams
 from repro.dragonfly.topology import Topology
-from repro.tenancy.engine import InterferenceEngine, arm_label
+from repro.tenancy.engine import (InterferenceEngine, arm_label,
+                                  run_mixes_lockstep)
 from repro.tenancy.spec import TenancyMix
+
+
+def _auto_lockstep(params: SimParams | None) -> bool:
+    if params is None or params.backend != "jax":
+        return False
+    from repro.compat.runtime import resolve_backend
+    return resolve_backend("jax") == "jax"
 
 
 def sweep(topo: Topology | str | None, mixes: Sequence[TenancyMix],
           arms: Mapping, *, params: SimParams | None = None,
           rounds: int = 4, seed: int = 0,
           placements: Sequence = (None,),
-          shared_engine: bool = False) -> list:
+          shared_engine: bool = False,
+          lockstep: bool | None = None) -> list:
     """Run the grid; one flat record dict per cell.
 
     arms: {label: RoutingMode member | policy name} — the victim's
     candidate routing arms.  placements: victim spread overrides (None ==
     keep the mix's specced placement).  Every cell re-seeds its own
     InterferenceEngine so cells are independent and order-insensitive.
+
+    lockstep: drive each (mix, placement) column's arm cells
+    round-for-round through one batched phase dispatch
+    (`run_mixes_lockstep`) instead of cell-after-cell.  Default None
+    auto-enables it when the params ask for a usable jax backend, where
+    the column becomes a single vmapped kernel call per round; records
+    are identical either way because every cell keeps its own simulator
+    and RNG stream.
     """
+    if lockstep is None:
+        lockstep = _auto_lockstep(params)
     records = []
     for mix in mixes:
         for place in placements:
             m = mix if place is None else mix.with_victim_spread(place)
-            for label, arm in arms.items():
-                cell = m.with_victim_arm(arm)
-                eng = InterferenceEngine(topo, params, seed=seed,
-                                         shared_engine=shared_engine)
-                res = eng.run_mix(cell, rounds=rounds)
+            labels = list(arms.items())
+            cells = [m.with_victim_arm(arm) for _, arm in labels]
+            engines = [InterferenceEngine(topo, params, seed=seed,
+                                          shared_engine=shared_engine)
+                       for _ in cells]
+            if lockstep and len(cells) > 1:
+                col = run_mixes_lockstep(engines, cells, rounds=rounds)
+            else:
+                col = [eng.run_mix(cell, rounds=rounds)
+                       for eng, cell in zip(engines, cells)]
+            for (label, arm), eng, cell, res in zip(labels, engines,
+                                                    cells, col):
                 vic = res.victim_report
                 records.append({
                     "mix": mix.name,

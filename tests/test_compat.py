@@ -174,3 +174,72 @@ def test_shard_map_legacy_branch_translates_to_check_rep(monkeypatch):
 def test_cost_analysis_normalizes_both_shapes(raw, expected):
     compiled = types.SimpleNamespace(cost_analysis=lambda: raw)
     assert compat.cost_analysis(compiled) == expected
+
+
+# --------------------------------------------------------------------------
+# jit_compiled donation drift (donate_argnums unsupported on ancient jit
+# signatures -> silently degrade to a plain jit).
+# --------------------------------------------------------------------------
+def test_jit_compiled_with_donation_runs():
+    fn = compat.jit_compiled(lambda x: x * 2.0, donate_argnums=(0,))
+    out = fn(jnp.ones(8, jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), 2.0)
+
+
+def test_jit_compiled_degrades_when_donation_unsupported(monkeypatch):
+    calls = []
+
+    def fake_jit(fun, **kw):
+        calls.append(dict(kw))
+        if "donate_argnums" in kw:      # pre-donation jit signature
+            raise TypeError("unexpected keyword argument 'donate_argnums'")
+        return fun
+    monkeypatch.setattr(jax, "jit", fake_jit)
+    fn = compat.jit_compiled(lambda x: x + 1, donate_argnums=(0,),
+                             static_argnames=("n",))
+    assert fn(1) == 2                   # plain-jit fallback still runs
+    assert "donate_argnums" in calls[0]          # tried the modern path
+    assert "donate_argnums" not in calls[-1]     # retried without
+    assert calls[-1]["static_argnames"] == ("n",)
+
+
+def test_jit_compiled_without_donation_skips_probe(monkeypatch):
+    calls = []
+
+    def fake_jit(fun, **kw):
+        calls.append(dict(kw))
+        return fun
+    monkeypatch.setattr(jax, "jit", fake_jit)
+    compat.jit_compiled(lambda x: x)
+    assert calls == [{}]
+
+
+# --------------------------------------------------------------------------
+# TPU detection + the pallas_kernel knob's tri-state resolution.
+# --------------------------------------------------------------------------
+def test_on_tpu_matches_default_backend():
+    assert compat.on_tpu() == (jax.default_backend() == "tpu")
+
+
+def test_on_tpu_false_when_jax_unusable(monkeypatch):
+    import repro.compat.runtime as rt
+    monkeypatch.setattr(rt, "_JAX_OK", False)
+    assert compat.on_tpu() is False
+
+
+def test_resolve_pallas_kernel_auto_follows_tpu(monkeypatch):
+    import repro.compat.runtime as rt
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    monkeypatch.setattr(rt, "_JAX_OK", True)
+    monkeypatch.setattr(rt, "_PALLAS_OK", True)
+    assert compat.resolve_pallas_kernel("auto") is True
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert compat.resolve_pallas_kernel("auto") is False
+
+
+def test_resolve_pallas_kernel_forced_ignores_hardware(monkeypatch):
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert compat.resolve_pallas_kernel("on") is True
+    assert compat.resolve_pallas_kernel("off") is False
+    with pytest.raises(ValueError):
+        compat.resolve_pallas_kernel("banana")
